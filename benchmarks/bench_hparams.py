@@ -1,0 +1,47 @@
+"""Fig. 7: bucket-size and bit-width sweeps.  Full accuracy sweeps are
+GPU-weeks; we report the quantity accuracy tracks (per Fig. 4 vs Table 1):
+normalized quantization variance of real model gradients, per method,
+across bucket sizes and bits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization_variance
+from repro.core.schemes import QuantScheme
+from repro.dist.sync import gather_stats
+from .common import emit
+
+
+def run(d: int = 131072):
+    g = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 0.01
+    gn2 = float(jnp.sum(g * g))
+    for name in ("alq", "amq", "qsgdinf", "nuqsgd"):
+        for bucket in (256, 1024, 8192, 16384):
+            scheme = QuantScheme(name=name, bits=3, bucket_size=bucket)
+            state = scheme.init_state()
+            if scheme.adaptive:
+                stats = jax.jit(lambda f, s=scheme: gather_stats(
+                    f, s, axes=()))(g)
+                state = scheme.update_state(state, stats)
+            var = float(quantization_variance(
+                g, state.levels, bucket_size=bucket,
+                norm_type=scheme.norm_type))
+            emit(f"fig7a/{name}/bucket={bucket}", 0.0,
+                 f"norm_var={var/gn2:.4e}")
+        for bits in (2, 3, 4, 6, 8):
+            scheme = QuantScheme(name=name, bits=bits, bucket_size=8192)
+            state = scheme.init_state()
+            if scheme.adaptive:
+                stats = jax.jit(lambda f, s=scheme: gather_stats(
+                    f, s, axes=()))(g)
+                state = scheme.update_state(state, stats)
+            var = float(quantization_variance(
+                g, state.levels, bucket_size=8192,
+                norm_type=scheme.norm_type))
+            emit(f"fig7b/{name}/bits={bits}", 0.0,
+                 f"norm_var={var/gn2:.4e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig. 8: convergence of the level-update algorithms (ALQ coordinate
+descent vs projection-free GD vs AMQ multiplier GD) on the same
+sufficient statistics, from uniform and exponential initializations."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (TruncNormStats, alq_gd_update, alq_update,
+                        amq_objective, amq_update, expected_variance,
+                        exp_levels, multiplier_to_levels, uniform_levels)
+from .common import emit
+
+
+def run():
+    stats = TruncNormStats(
+        mu=jnp.asarray([0.03, 0.1, 0.25], jnp.float32),
+        sigma=jnp.asarray([0.02, 0.08, 0.2], jnp.float32),
+        gamma=jnp.asarray([0.5, 0.3, 0.2], jnp.float32))
+    for init_name, init in (("uniform", uniform_levels(3)),
+                            ("exp", exp_levels(3, 0.5))):
+        psi0 = float(expected_variance(stats, init))
+        for sweeps in (1, 3, 10):
+            t0 = time.perf_counter()
+            lv = jax.block_until_ready(
+                alq_update(init, stats, sweeps=sweeps))
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"fig8/alq_cd/{init_name}/sweeps={sweeps}", us,
+                 f"psi={float(expected_variance(stats, lv)):.4e};"
+                 f"psi0={psi0:.4e}")
+        for steps in (10, 50, 200):
+            lv = alq_gd_update(init, stats, steps=steps)
+            emit(f"fig8/alq_gd/{init_name}/steps={steps}", 0.0,
+                 f"psi={float(expected_variance(stats, lv)):.4e}")
+    for steps in (10, 100, 400):
+        p = amq_update(jnp.float32(0.5), stats, bits=3, steps=steps)
+        emit(f"fig8/amq/steps={steps}", 0.0,
+             f"psi={float(amq_objective(p, stats, 3)):.4e};p={float(p):.3f}")
+
+
+if __name__ == "__main__":
+    run()

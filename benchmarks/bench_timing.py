@@ -1,0 +1,56 @@
+"""Tables 5-7: per-step cost of the quantization layer itself —
+encode (Pallas interpret), pack, decode, and the level update — across
+bits and bucket sizes, plus the modeled wire bytes each configuration
+moves (the quantity the paper's 21-36%-of-fp32 step times derive from)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.schemes import QuantScheme
+from repro.dist.sync import gather_stats, maybe_update_levels
+from repro.kernels import ops
+from .common import emit, timeit
+
+
+def run(d: int = 1 << 20):
+    flat = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 0.01
+    for bits in (2, 3, 4, 8):
+        for bucket in (1024, 8192, 16384):
+            scheme = QuantScheme(name="alq", bits=bits, bucket_size=bucket)
+            lv = scheme.init_state().levels
+            vb = flat.reshape(-1, bucket)
+            u = jax.random.uniform(jax.random.PRNGKey(1), vb.shape)
+
+            enc = jax.jit(lambda vb, u, lv: ops.quantize_op(
+                vb, u, lv, norm_type="l2", use_pallas=False))
+            us_enc, (codes, norms) = timeit(enc, vb, u, lv)
+
+            pk = jax.jit(lambda c: packing.pack_signed(
+                c, scheme.num_levels))
+            us_pack, packed = timeit(pk, codes)
+
+            dec = jax.jit(lambda c, n, lv: ops.dequantize_op(
+                c, n, lv, use_pallas=False))
+            us_dec, _ = timeit(dec, codes, norms, lv)
+
+            wire_bits = packing.wire_bits_for(scheme.num_levels)
+            wire_bytes = packed.nbytes + norms.nbytes
+            emit(f"timing/encode/bits={bits}/bucket={bucket}", us_enc,
+                 f"wire_bytes={wire_bytes};vs_fp32={wire_bytes/(4*d):.3f};"
+                 f"wire_bits_per_coord={wire_bits}")
+            emit(f"timing/pack/bits={bits}/bucket={bucket}", us_pack, "")
+            emit(f"timing/decode/bits={bits}/bucket={bucket}", us_dec, "")
+
+    # ALQ level-update cost (paper: 0.4-0.5% of training time)
+    scheme = QuantScheme(name="alq", bits=3, bucket_size=8192)
+    state = scheme.init_state()
+    upd = jax.jit(lambda f, s: maybe_update_levels(
+        f, scheme, s, jnp.bool_(True), axes=(), use_pallas=False))
+    us_upd, _ = timeit(upd, flat, state)
+    emit("timing/alq_level_update", us_upd, f"d={d}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Beyond-paper: the two-phase quantized allreduce — wire bytes vs the
+paper's broadcast-all scheme at production worker counts, and the
+variance cost of the second quantization (single-device simulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quantize import quantize as _quantize_fn
+from repro.core.schemes import QuantScheme
+from .common import emit
+
+
+def run(d: int = 262144):
+    g = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 0.01
+    scheme = QuantScheme(name="alq", bits=3, bucket_size=4096)
+    lv = scheme.init_state().levels
+    wire = packing.wire_bits_for(scheme.num_levels)
+
+    for M in (16, 32, 256, 512):
+        bytes_bcast = M * d * wire / 8
+        bytes_2ph = 2 * d * wire / 8
+        bytes_fp32_ring = 2 * d * 4
+        emit(f"twophase/wire/M={M}", 0.0,
+             f"broadcast_B={bytes_bcast:.3e};two_phase_B={bytes_2ph:.3e};"
+             f"fp32_ring_B={bytes_fp32_ring:.3e}")
+
+    # variance compounding: Q2(mean(Q(g_i))) vs mean(Q(g_i)).
+    # Re-quantizing on the same 3-bit grid forfeits the 1/M averaging
+    # (~M x compounding); dist.sync's production path therefore uses an
+    # 8-bit uniform grid for phase 2 (still 13 wire bits/coord total vs
+    # the broadcast scheme's M*4).
+    from repro.core import uniform_levels
+    M = 8
+    lv8 = uniform_levels(8)
+
+    def one(key):
+        ks = jax.random.split(key, M + 2)
+        qs = jax.lax.map(lambda k: _quantize_fn(
+            g, lv, k, bucket_size=4096), ks[:M])
+        mean1 = qs.mean(0)
+        req3 = _quantize_fn(mean1, lv, ks[M], bucket_size=4096)
+        req8 = _quantize_fn(mean1, lv8, ks[M + 1], bucket_size=4096)
+        return (jnp.sum((mean1 - g) ** 2), jnp.sum((req3 - g) ** 2),
+                jnp.sum((req8 - g) ** 2))
+
+    e1, e3, e8 = jax.lax.map(one, jax.random.split(jax.random.PRNGKey(1), 6))
+    emit("twophase/variance", 0.0,
+         f"one_phase_err={float(e1.mean()):.4e};"
+         f"requant3bit_err={float(e3.mean()):.4e}"
+         f"(x{float(e3.mean()/e1.mean()):.1f});"
+         f"requant8bit_err={float(e8.mean()):.4e}"
+         f"(x{float(e8.mean()/e1.mean()):.2f})")
+
+
+if __name__ == "__main__":
+    run()

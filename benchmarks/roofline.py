@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+prints, per (arch x shape x mesh): the three roofline terms in seconds,
+the dominant bottleneck, MODEL_FLOPS / HLO_FLOPS, and per-device memory.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load(dryrun_dir=DRYRUN_DIR):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def run():
+    recs = load()
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("tag"):
+            name += f"/{r['tag']}"
+        if not r["ok"]:
+            emit(name, 0.0, f"FAILED={r['error'][:80]}")
+            continue
+        ro = r["roofline"]
+        emit(name, 0.0,
+             f"compute_s={ro['compute_s']:.4e};"
+             f"memory_s={ro['memory_s']:.4e};"
+             f"collective_s={ro['collective_s']:.4e};"
+             f"dominant={ro['dominant']};"
+             f"useful_flops={r.get('useful_flops_ratio', 0):.3f};"
+             f"mem_GiB={r['bytes_per_device']['total']/2**30:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_accuracy            Table 1 (+Table 4): methods vs SuperSGD, M=4
+  bench_scaling             Table 2: M = 4 / 16 / 32
+  bench_variance            Figs. 4, 5, 12: quantization variance
+  bench_level_convergence   Fig. 8: ALQ-CD vs GD vs AMQ
+  bench_codelength          Thm 3 / App. D: bits per coordinate
+  bench_hparams             Fig. 7: bucket-size x bits sweeps
+  bench_timing              Tables 5-7: encode/pack/decode/update cost
+  bench_twophase            beyond-paper: two-phase allreduce
+  roofline                  dry-run roofline table (deliverable g)
+"""
+import sys
+
+from . import (bench_accuracy, bench_codelength, bench_hparams,
+               bench_level_convergence, bench_scaling, bench_timing,
+               bench_twophase, bench_variance, roofline)
+
+ALL = {
+    "timing": bench_timing.run,
+    "codelength": bench_codelength.run,
+    "level_convergence": bench_level_convergence.run,
+    "hparams": bench_hparams.run,
+    "scaling": bench_scaling.run,
+    "twophase": bench_twophase.run,
+    "variance": bench_variance.run,
+    "accuracy": bench_accuracy.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        ALL[name]()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table-1 style comparison: train the same model/data/seed with
+SuperSGD (fp32), ALQ, AMQ, QSGDinf, NUQSGD and TRN at 3 bits with M=4
+simulated workers; print final loss + next-token accuracy per method.
+
+  PYTHONPATH=src python examples/compare_quantizers.py [--steps 60]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+from benchmarks.common import SimWorkers
+from repro.core.schemes import QuantScheme
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--M", type=int, default=4)
+args = ap.parse_args()
+
+print(f"{'method':10s} {'final loss':>10s} {'val acc':>8s}")
+for m in ("fp32", "alq", "alq_n", "amq", "qsgdinf", "nuqsgd", "trn"):
+    sw = SimWorkers(QuantScheme(name=m, bits=3, bucket_size=1024),
+                    M=args.M, seed=0)
+    metr = sw.run(args.steps, update_at=(2, 10, 30))
+    acc = sw.eval_accuracy()
+    print(f"{m:10s} {np.mean(metr['loss'][-5:]):10.4f} {acc:8.4f}",
+          flush=True)

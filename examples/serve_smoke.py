@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests: prefill + greedy decode
+against the sequence-sharded KV cache (the decode dry-run's serve_step).
+
+  PYTHONPATH=src python examples/serve_smoke.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", "mixtral-8x7b", "--batch", "2", "--prompt-len", "16",
+     "--gen", "8"],
+    check=True)

@@ -1,0 +1,39 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON artifacts.  Usage: python experiments/make_tables.py [dir]"""
+import glob
+import json
+import sys
+
+
+def fmt(recs):
+    recs = sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = []
+    out.append("| arch | shape | mesh | ok | micro | flops/dev | hbm B/dev "
+               "| wire B/dev | compute s | memory s | collective s | "
+               "dominant | useful | mem GiB/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("tag"):
+            continue  # perf-iteration runs rendered separately
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL "
+                       f"| | | | | | | | | | {r['error'][:60]} |")
+            continue
+        ro = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('microbatches', 1)} "
+            f"| {ro['flops_per_device']:.2e} "
+            f"| {ro['hbm_bytes_per_device']:.2e} "
+            f"| {ro['collective_wire_bytes']:.2e} "
+            f"| {ro['compute_s']:.2e} | {ro['memory_s']:.2e} "
+            f"| {ro['collective_s']:.2e} | **{ro['dominant']}** "
+            f"| {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {r['bytes_per_device']['total']/2**30:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = [json.load(open(f)) for f in glob.glob(f"{d}/*.json")]
+    print(fmt(recs))

@@ -1,0 +1,16 @@
+"""The paper's own experimental scale, transposed to this codebase: a
+small dense model trained on CPU for the Table-1/Fig-4 style benchmarks
+(the paper used ResNet-32/110 on CIFAR; the quantizer is model-agnostic
+so fidelity experiments here use a small member of the assigned
+transformer family — see DESIGN.md §6.5)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-proxy", arch_type="dense",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=256,
+    compute_dtype="float32",
+    source="paper Sec. 5 scale proxy",
+)
+
+SMOKE = CONFIG

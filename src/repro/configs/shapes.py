@@ -1,0 +1,51 @@
+"""The four assigned input shapes and their ShapeDtypeStruct stand-ins."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (global shapes,
+    no device allocation — the dry-run pattern)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "ids": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"ids": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token + positions; cache supplied separately
+        specs = {
+            "token": jax.ShapeDtypeStruct((B,), i32),
+            "pos": jax.ShapeDtypeStruct((B,), i32),
+        }
+    if cfg.cross_attn_every and shape.kind != "decode":
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    elif cfg.cross_attn_every:
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return specs

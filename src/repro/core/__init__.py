@@ -1,0 +1,48 @@
+"""Core of the paper's contribution: adaptive gradient quantization."""
+from .levels import (
+    exp_levels,
+    is_feasible,
+    level_gaps,
+    multiplier_to_levels,
+    num_inner,
+    num_levels,
+    ternary_levels,
+    uniform_levels,
+)
+from .quantize import (
+    NORM_L1,
+    NORM_L2,
+    NORM_LINF,
+    QuantizedTensor,
+    bucket_norm,
+    decode,
+    encode,
+    normalized_magnitudes,
+    pad_to_buckets,
+    quantization_variance,
+    quantize,
+    stochastic_round,
+)
+from .stats import (
+    TruncNormStats,
+    expected_variance,
+    fit_bucket_stats,
+    merge_stats,
+    mixture_cdf,
+    mixture_inverse_cdf,
+    mixture_pdf,
+    partial_moment0,
+    partial_moment1,
+    partial_moment2,
+)
+from .adapt import alq_gd_update, alq_update, amq_gradient, amq_objective, amq_update, psi_gradient
+from .coding import (
+    code_length_bound,
+    entropy_bits,
+    expected_bits_per_coordinate,
+    expected_huffman_bits,
+    huffman_code_lengths,
+    level_probabilities,
+)
+from .packing import pack, pack_signed, packed_words, unpack, unpack_signed, wire_bits_for
+from .schemes import ALL_SCHEMES, QuantScheme, SchemeState, default_update_schedule

@@ -1,0 +1,177 @@
+"""Adaptive level updates: ALQ (coordinate descent), projection-free GD,
+and AMQ (exponential-multiplier gradient descent).
+
+All updates consume a ``TruncNormStats`` mixture (the sufficient
+statistics of Algorithm 1) and are closed-form in (Phi, phi) plus
+bisection searches, so they are cheap, deterministic, and identical on
+every processor — no extra synchronization is needed beyond the stats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .levels import level_gaps, multiplier_to_levels
+from .stats import (
+    TruncNormStats,
+    expected_variance,
+    mixture_cdf,
+    partial_moment0,
+    partial_moment1,
+)
+
+
+# ---------------------------------------------------------------------------
+# ALQ: coordinate descent (Thm 1 / Eqs. 4-5, App. C.1)
+# ---------------------------------------------------------------------------
+
+def _cd_target(stats: TruncNormStats, a, c):
+    """RHS of Eq. (4): F(c) - int_a^c (r-a)/(c-a) dF(r)."""
+    m1 = partial_moment1(stats, a, c)
+    m0 = partial_moment0(stats, a, c)
+    frac = (m1 - a * m0) / jnp.maximum(c - a, 1e-12)
+    return mixture_cdf(stats, c) - frac
+
+
+def _bisect_cdf(stats: TruncNormStats, target, lo, hi, iters: int = 40):
+    """Solve F(x) = target for x in [lo, hi] (F is monotone)."""
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        below = mixture_cdf(stats, mid) < target
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "bisect_iters"))
+def alq_update(
+    levels: jnp.ndarray,
+    stats: TruncNormStats,
+    *,
+    sweeps: int = 10,
+    bisect_iters: int = 40,
+) -> jnp.ndarray:
+    """ALQ: sequential CD sweeps over interior levels (Eq. 5).
+
+    Each sub-problem min_{l_j} Psi is convex (Prop. 2); the update is the
+    closed form l_j* = F^{-1}(F(l_{j+1}) - int (r - l_{j-1})/(l_{j+1} -
+    l_{j-1}) dF) solved by bisection on [l_{j-1}, l_{j+1}].  CD keeps
+    l in the feasible set without projection.  Converges in < 10 sweeps
+    in practice (paper Sec. 3.1).
+    """
+    s = levels.shape[0] - 2
+    if s <= 0:
+        return levels  # ternary etc.: nothing to adapt
+
+    def one_level(j, lv):
+        a, c = lv[j - 1], lv[j + 1]
+        target = _cd_target(stats, a, c)
+        new = _bisect_cdf(stats, target, a, c, iters=bisect_iters)
+        # guard strict monotonicity under fp
+        new = jnp.clip(new, a + 1e-7, c - 1e-7)
+        return lv.at[j].set(new)
+
+    def sweep(_, lv):
+        return jax.lax.fori_loop(1, s + 1, one_level, lv)
+
+    return jax.lax.fori_loop(0, sweeps, sweep, levels)
+
+
+# ---------------------------------------------------------------------------
+# Projection-free gradient descent (Eqs. 6-7, App. C.2)
+# ---------------------------------------------------------------------------
+
+def psi_gradient(levels: jnp.ndarray, stats: TruncNormStats) -> jnp.ndarray:
+    """dPsi/dl_j = int_{l_{j-1}}^{l_j} (r - l_{j-1}) dF
+                  - int_{l_j}^{l_{j+1}} (l_{j+1} - r) dF   (Eq. 6)."""
+    a = levels[:-2]   # l_{j-1}
+    b = levels[1:-1]  # l_j
+    c = levels[2:]    # l_{j+1}
+    left = partial_moment1(stats, a, b) - a * partial_moment0(stats, a, b)
+    right = c * partial_moment0(stats, b, c) - partial_moment1(stats, b, c)
+    return left - right
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def alq_gd_update(
+    levels: jnp.ndarray,
+    stats: TruncNormStats,
+    *,
+    lr: float = 0.5,
+    steps: int = 50,
+) -> jnp.ndarray:
+    """ALQG: projection-free GD — step clipped to delta_j/2 (Eq. 7)."""
+    if levels.shape[0] <= 2:
+        return levels
+
+    def body(_, lv):
+        g = psi_gradient(lv, stats)
+        delta = level_gaps(lv)
+        step = jnp.sign(g) * jnp.minimum(lr * jnp.abs(g), delta / 2.0)
+        return lv.at[1:-1].set(lv[1:-1] - step)
+
+    return jax.lax.fori_loop(0, steps, body, levels)
+
+
+# ---------------------------------------------------------------------------
+# AMQ: exponential levels, single multiplier p (Sec. 3.3 / App. C.3)
+# ---------------------------------------------------------------------------
+
+def amq_objective(p: jnp.ndarray, stats: TruncNormStats, bits: int) -> jnp.ndarray:
+    """Psi(p) for levels [0, p^s, ..., p, 1] (Eq. 32 restricted to [0,1])."""
+    return expected_variance(stats, multiplier_to_levels(p, bits))
+
+
+def amq_gradient(p: jnp.ndarray, stats: TruncNormStats, bits: int) -> jnp.ndarray:
+    """Closed-form dPsi/dp (Eq. 8 / App. C.3), mixture version.
+
+    s here is the largest exponent: levels p^s < ... < p < p^0 = 1.
+    """
+    s = 2 ** bits - 2
+    if s <= 0:
+        return jnp.zeros_like(p)
+    # term for the lowest bin [0, p^s]: variance (p^{2s} - ... ) in the
+    # paper's symmetric form; on [0,1] with level 0 present the lowest bin
+    # is (p^s - r) r, whose p-derivative is s p^{s-1} * m1 on [0, p^s].
+    # We differentiate Psi = sum_j int (l_{j+1}-r)(r-l_j) dF directly:
+    #   d/dp [(p^{j}] = j p^{j-1}; bins are [p^{j+1}, p^j] for j=0..s-1
+    #   plus [0, p^s].
+    j = jnp.arange(0, s, dtype=p.dtype)  # j = 0..s-1
+    a = p ** (j + 1)  # lower edge
+    c = p ** j        # upper edge
+    m0 = partial_moment0(stats, a, c)
+    m1 = partial_moment1(stats, a, c)
+    # d/dp int_a^c (c - r)(r - a) dF(r)
+    #   = c'(p) * int (r - a) dF + a'(p) * int -(c - r) dF
+    #   (Leibniz boundary terms vanish since the integrand is 0 at r=a,c)
+    cprime = j * p ** jnp.maximum(j - 1, 0) * jnp.where(j == 0, 0.0, 1.0)
+    aprime = (j + 1) * p ** j
+    dbin = cprime * (m1 - a * m0) + aprime * (m1 - c * m0)
+    # lowest bin [0, p^s]: integrand (p^s - r) * (r - 0)
+    m1_low = partial_moment1(stats, jnp.zeros_like(p), p ** s)
+    dlow = s * p ** (s - 1) * m1_low
+    return jnp.sum(dbin) + dlow
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "steps"))
+def amq_update(
+    p: jnp.ndarray,
+    stats: TruncNormStats,
+    *,
+    bits: int,
+    lr: float = 0.05,
+    steps: int = 100,
+) -> jnp.ndarray:
+    """GD on the multiplier with backtracking-free clipped steps."""
+
+    def body(_, p):
+        g = amq_gradient(p, stats, bits)
+        p_new = p - lr * g
+        return jnp.clip(p_new, 0.02, 0.98)
+
+    return jax.lax.fori_loop(0, steps, body, jnp.asarray(p))

@@ -1,0 +1,116 @@
+"""Entropy coding / code-length accounting (paper App. D, Thm 3).
+
+The device wire format is fixed-width packed indices (packing.py); this
+module provides the paper's *expected-bits* accounting: closed-form level
+occupancy probabilities Pr(l_j) (Prop. 6), their entropy H(L), a real
+host-side Huffman code built from those probabilities, and the Thm-3
+bound  E|ENCODE(v)| <= b + n_{l1,d} + d (H(L) + 1).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .stats import TruncNormStats, partial_moment0, partial_moment1
+
+
+def level_probabilities(levels: jnp.ndarray, stats: TruncNormStats) -> jnp.ndarray:
+    """Pr(l_j) under randomized rounding (Prop. 6), closed form.
+
+    Pr(l_j) = int_{l_{j-1}}^{l_j} (r-l_{j-1})/(l_j-l_{j-1}) dF
+            + int_{l_j}^{l_{j+1}} (l_{j+1}-r)/(l_{j+1}-l_j) dF
+    with one-sided variants at the endpoints.  Returns a vector over all
+    levels (including 0 and 1) summing to 1.
+    """
+    l = levels
+    n = l.shape[0]
+    a, b = l[:-1], l[1:]  # bin edges
+    gap = jnp.maximum(b - a, 1e-12)
+    m0 = partial_moment0(stats, a, b)
+    m1 = partial_moment1(stats, a, b)
+    up = (m1 - a * m0) / gap      # mass rounded *up* from each bin
+    down = (b * m0 - m1) / gap    # mass rounded *down*
+    probs = jnp.zeros((n,), l.dtype)
+    probs = probs.at[1:].add(up)
+    probs = probs.at[:-1].add(down)
+    # numerical cleanup: F may not integrate exactly to 1 on [0,1]
+    probs = jnp.clip(probs, 0.0, None)
+    return probs / jnp.maximum(jnp.sum(probs), 1e-12)
+
+
+def entropy_bits(probs: jnp.ndarray) -> jnp.ndarray:
+    """H(L) in bits."""
+    p = jnp.clip(probs, 1e-12, 1.0)
+    return -jnp.sum(jnp.where(probs > 0, probs * jnp.log2(p), 0.0))
+
+
+def huffman_code_lengths(probs: Sequence[float]) -> np.ndarray:
+    """Host-side Huffman code lengths for the level symbols.
+
+    Optimal prefix code (Thm 5): H(L) <= E[len] <= H(L) + 1.
+    """
+    probs = np.asarray(probs, dtype=np.float64)
+    n = len(probs)
+    if n == 1:
+        return np.array([1])
+    heap = [(float(p), i, None) for i, p in enumerate(probs)]
+    heapq.heapify(heap)
+    counter = n
+    parents: dict[int, tuple] = {}
+    while len(heap) > 1:
+        p1, i1, _ = heapq.heappop(heap)
+        p2, i2, _ = heapq.heappop(heap)
+        parents[counter] = (i1, i2)
+        heapq.heappush(heap, (p1 + p2, counter, None))
+        counter += 1
+    root = heap[0][1]
+    lengths = np.zeros(counter, dtype=np.int64)
+
+    stack = [(root, 0)]
+    while stack:
+        node, depth = stack.pop()
+        if node in parents:
+            l, r = parents[node]
+            stack.append((l, depth + 1))
+            stack.append((r, depth + 1))
+        else:
+            lengths[node] = max(depth, 1)
+    return lengths[:n]
+
+
+def expected_huffman_bits(probs: np.ndarray) -> float:
+    """E[len] of the Huffman code for one magnitude symbol."""
+    lengths = huffman_code_lengths(np.asarray(probs))
+    return float(np.sum(np.asarray(probs) * lengths))
+
+
+def expected_bits_per_coordinate(
+    levels: jnp.ndarray, stats: TruncNormStats, *, use_huffman: bool = True
+) -> float:
+    """Expected wire bits per coordinate: magnitude symbol + sign bit for
+    nonzero symbols (App. D encoding)."""
+    probs = np.asarray(level_probabilities(levels, stats))
+    mag = expected_huffman_bits(probs) if use_huffman else float(
+        np.ceil(np.log2(len(probs)))
+    )
+    p_nonzero = 1.0 - probs[0]
+    return mag + p_nonzero  # one sign bit whenever the symbol is nonzero
+
+
+def code_length_bound(
+    levels: jnp.ndarray,
+    stats: TruncNormStats,
+    d: int,
+    *,
+    q: float = 2.0,
+    norm_bits: int = 32,
+) -> float:
+    """Thm 3 upper bound: b + n_{l1,d} + d (H(L) + 1)."""
+    probs = level_probabilities(levels, stats)
+    H = float(entropy_bits(probs))
+    l1 = float(levels[1]) if levels.shape[0] > 1 else 1.0
+    n_l1_d = min(l1 ** (-q) + d ** (1.0 - 1.0 / q) / l1, float(d))
+    return norm_bits + n_l1_d + d * (H + 1.0)

@@ -1,0 +1,65 @@
+"""Quantization level grids (the object ALQ/AMQ adapt).
+
+A level vector is ``l = [l0=0, l1, ..., ls, l_{s+1}=1]`` on the unit
+interval, applied to *normalized magnitudes* ``r = |v_i| / ||v||``; the
+sign is carried separately (paper Sec. 3).  For ``bits`` b we follow the
+paper's convention of ``2**b`` levels on [0, 1] (so s = 2**b - 2 interior
+adaptable levels); the wire format then spends b bits on the magnitude
+symbol plus one sign bit for nonzero symbols (see coding.py / packing.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def num_levels(bits: int) -> int:
+    """Total number of points on [0,1] (including 0 and 1)."""
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    return 2 ** bits
+
+
+def num_inner(bits: int) -> int:
+    """Number of adaptable interior levels s."""
+    return num_levels(bits) - 2
+
+
+def uniform_levels(bits: int, dtype=jnp.float32) -> jnp.ndarray:
+    """QSGD / QSGDinf grid: uniformly spaced levels on [0, 1]."""
+    return jnp.linspace(0.0, 1.0, num_levels(bits), dtype=dtype)
+
+
+def exp_levels(bits: int, p: float = 0.5, dtype=jnp.float32) -> jnp.ndarray:
+    """NUQSGD / AMQ grid: [0, p^s, ..., p^2, p, 1] (exponentially spaced)."""
+    n = num_levels(bits)
+    # n-1 nonzero levels: p**(n-2), ..., p**1, p**0
+    exps = jnp.arange(n - 2, -1, -1, dtype=dtype)
+    pos = jnp.asarray(p, dtype) ** exps
+    return jnp.concatenate([jnp.zeros((1,), dtype), pos])
+
+
+def ternary_levels(dtype=jnp.float32) -> jnp.ndarray:
+    """TernGrad: levels {0, 1} under L-inf normalization (s = 0)."""
+    return jnp.asarray([0.0, 1.0], dtype)
+
+
+def multiplier_to_levels(p: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """AMQ parametrization: multiplier p -> level vector [0, p^s..p, 1]."""
+    n = 2 ** bits
+    exps = jnp.arange(n - 2, -1, -1, dtype=jnp.result_type(p, jnp.float32))
+    pos = p ** exps
+    return jnp.concatenate([jnp.zeros((1,), pos.dtype), pos])
+
+
+def is_feasible(levels: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
+    """l in L: strictly increasing, l0 = 0, l_{s+1} = 1."""
+    ok_mono = jnp.all(levels[1:] - levels[:-1] > eps)
+    ok_ends = (levels[0] == 0.0) & (levels[-1] == 1.0)
+    return ok_mono & ok_ends
+
+
+def level_gaps(levels: jnp.ndarray) -> jnp.ndarray:
+    """delta_j = min(l_j - l_{j-1}, l_{j+1} - l_j) for interior j (Eq. 7)."""
+    left = levels[1:-1] - levels[:-2]
+    right = levels[2:] - levels[1:-1]
+    return jnp.minimum(left, right)

@@ -1,0 +1,85 @@
+"""k-bit <-> uint32 bit packing for the collective wire format.
+
+Signed level indices in [-(L-1), +(L-1)] are biased to unsigned symbols
+in [0, 2L-2] and packed ``wire_bits`` per symbol into a dense uint32
+stream.  This is what actually travels over ICI in the quantized
+allreduce: ``ceil(n * wire_bits / 32)`` words instead of n fp32 words.
+
+The packer is fully vectorized (two scatter-adds per stream — one for the
+low fragment of each symbol, one for the fragment spilling into the next
+word), so it lowers cleanly under jit/shard_map on any backend.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def wire_bits_for(num_levels: int) -> int:
+    """Bits per symbol for signed indices over `num_levels` magnitudes.
+
+    Symbols: 2*num_levels - 1 (zero is shared between signs).
+    """
+    n_sym = 2 * num_levels - 1
+    return max(1, math.ceil(math.log2(n_sym)))
+
+
+def packed_words(n: int, bits: int) -> int:
+    return -(-(n * bits) // 32)
+
+
+def pack(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unsigned symbols (int32 in [0, 2**bits)) into uint32 words."""
+    codes = codes.reshape(-1).astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    n = codes.shape[0]
+    nwords = packed_words(n, bits)
+    i = jnp.arange(n, dtype=jnp.uint32)
+    bitpos = i * jnp.uint32(bits)
+    widx = (bitpos >> 5).astype(jnp.int32)
+    off = bitpos & jnp.uint32(31)
+    lo = (codes << off).astype(jnp.uint32)
+    # fragment spilling into the next word; shift (32-off) is invalid for
+    # off == 0, so route through a masked shift.
+    spill_shift = jnp.where(off > 0, jnp.uint32(32) - off, jnp.uint32(31))
+    hi = jnp.where(off > 0, codes >> spill_shift, jnp.uint32(0))
+    # scatter into nwords+1 (spill slot), then drop the spill word — it is
+    # always zero when the stream length is exact.
+    out = jnp.zeros((nwords + 1,), jnp.uint32)
+    out = out.at[widx].add(lo, mode="promise_in_bounds")
+    out = out.at[widx + 1].add(hi, mode="promise_in_bounds")
+    return out[:nwords]
+
+
+def unpack(words: jnp.ndarray, n: int, bits: int) -> jnp.ndarray:
+    """Inverse of pack: recover n unsigned symbols (int32)."""
+    words = jnp.concatenate(
+        [words.astype(jnp.uint32), jnp.zeros((1,), jnp.uint32)])
+    i = jnp.arange(n, dtype=jnp.uint32)
+    bitpos = i * jnp.uint32(bits)
+    widx = (bitpos >> 5).astype(jnp.int32)
+    off = bitpos & jnp.uint32(31)
+    lo = words[widx] >> off
+    spill_shift = jnp.where(off > 0, jnp.uint32(32) - off, jnp.uint32(31))
+    hi = jnp.where(off > 0, words[widx + 1] << spill_shift, jnp.uint32(0))
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def bias_codes(signed_codes: jnp.ndarray, num_levels: int) -> jnp.ndarray:
+    """Signed index in [-(L-1), L-1] -> unsigned symbol in [0, 2L-2]."""
+    return (signed_codes.astype(jnp.int32) + (num_levels - 1)).astype(jnp.int32)
+
+
+def unbias_codes(symbols: jnp.ndarray, num_levels: int) -> jnp.ndarray:
+    return symbols.astype(jnp.int32) - (num_levels - 1)
+
+
+def pack_signed(signed_codes: jnp.ndarray, num_levels: int) -> jnp.ndarray:
+    bits = wire_bits_for(num_levels)
+    return pack(bias_codes(signed_codes, num_levels), bits)
+
+
+def unpack_signed(words: jnp.ndarray, n: int, num_levels: int) -> jnp.ndarray:
+    bits = wire_bits_for(num_levels)
+    return unbias_codes(unpack(words, n, bits), num_levels)

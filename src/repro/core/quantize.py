@@ -1,0 +1,151 @@
+"""Bucketed stochastic quantization Q_l (paper Sec. 3).
+
+A flat gradient is padded to a multiple of ``bucket_size``, reshaped to
+(num_buckets, bucket_size), and each bucket is normalized by its own Lq
+norm (the "bucketing trick", Sec. 5).  Each normalized magnitude is
+stochastically rounded to one of the levels; the wire representation is a
+*signed level index* (int8) plus one fp32 norm per bucket.
+
+``encode`` / ``decode`` are the reference (pure-jnp) pair; the Pallas
+kernels in ``repro.kernels`` implement the same contract with VMEM
+tiling and are tested against these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NORM_L2 = "l2"
+NORM_LINF = "linf"
+NORM_L1 = "l1"
+
+
+class QuantizedTensor(NamedTuple):
+    """Wire representation of one quantized (bucketed) tensor."""
+
+    codes: jnp.ndarray  # (num_buckets, bucket_size) int16 signed level index
+    norms: jnp.ndarray  # (num_buckets,) f32 bucket norms
+    dim: int            # original (unpadded) length
+
+
+def bucket_norm(vb: jnp.ndarray, norm_type: str) -> jnp.ndarray:
+    """Per-bucket Lq norm; vb is (num_buckets, bucket_size)."""
+    if norm_type == NORM_L2:
+        return jnp.sqrt(jnp.sum(vb * vb, axis=-1))
+    if norm_type == NORM_LINF:
+        return jnp.max(jnp.abs(vb), axis=-1)
+    if norm_type == NORM_L1:
+        return jnp.sum(jnp.abs(vb), axis=-1)
+    raise ValueError(f"unknown norm {norm_type!r}")
+
+
+def pad_to_buckets(v: jnp.ndarray, bucket_size: int) -> jnp.ndarray:
+    """Flatten and zero-pad to a bucket multiple -> (nb, bucket_size)."""
+    flat = v.reshape(-1)
+    d = flat.shape[0]
+    nb = -(-d // bucket_size)
+    pad = nb * bucket_size - d
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(nb, bucket_size)
+
+
+def normalized_magnitudes(
+    v: jnp.ndarray, bucket_size: int, norm_type: str
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (r, norms): r in [0,1], shape (nb, bucket_size)."""
+    vb = pad_to_buckets(v, bucket_size)
+    norms = bucket_norm(vb, norm_type)
+    safe = jnp.where(norms > 0, norms, 1.0)
+    r = jnp.abs(vb) / safe[:, None]
+    # Lq with q < inf can still give r>1 only for q<... never for q>=1 on
+    # single coords, but guard against fp slop.
+    return jnp.clip(r, 0.0, 1.0), norms
+
+
+def clip_coordinates(v: jnp.ndarray, clip_sigmas: float) -> jnp.ndarray:
+    """TernGrad-style pre-quantization clipping (paper Eq. 49)."""
+    flat = v.reshape(v.shape)
+    sigma = jnp.std(flat)
+    c = clip_sigmas * sigma
+    return jnp.clip(flat, -c, c)
+
+
+def stochastic_round(
+    r: jnp.ndarray, levels: jnp.ndarray, u: jnp.ndarray
+) -> jnp.ndarray:
+    """Map r in [0,1] to a level *index* with unbiased randomized rounding.
+
+    u ~ Uniform[0,1) of the same shape supplies the randomness (kept as an
+    explicit input so the Pallas kernel and the oracle share it exactly).
+    """
+    nlev = levels.shape[0]
+    tau = jnp.clip(jnp.searchsorted(levels, r, side="right") - 1, 0, nlev - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    rho = (r - lo) / jnp.maximum(hi - lo, 1e-30)
+    return (tau + (u < rho)).astype(jnp.int32)
+
+
+def encode(
+    v: jnp.ndarray,
+    levels: jnp.ndarray,
+    key: jax.Array,
+    *,
+    bucket_size: int,
+    norm_type: str = NORM_L2,
+) -> QuantizedTensor:
+    """ENCODE_l(v): signed level indices + bucket norms."""
+    d = v.size
+    r, norms = normalized_magnitudes(v, bucket_size, norm_type)
+    u = jax.random.uniform(key, r.shape, dtype=r.dtype)
+    idx = stochastic_round(r, levels, u)
+    sign = jnp.sign(pad_to_buckets(v, bucket_size))
+    codes = (idx * sign).astype(jnp.int16)
+    return QuantizedTensor(codes=codes, norms=norms.astype(jnp.float32), dim=d)
+
+
+def decode(qt: QuantizedTensor, levels: jnp.ndarray) -> jnp.ndarray:
+    """DECODE_l: back to a flat float vector of length qt.dim."""
+    idx = jnp.abs(qt.codes.astype(jnp.int32))
+    mags = levels[idx] * qt.norms[:, None]
+    vals = mags * jnp.sign(qt.codes.astype(levels.dtype))
+    return vals.reshape(-1)[: qt.dim]
+
+
+def quantize(
+    v: jnp.ndarray,
+    levels: jnp.ndarray,
+    key: jax.Array,
+    *,
+    bucket_size: int,
+    norm_type: str = NORM_L2,
+) -> jnp.ndarray:
+    """Q_l(v) = DECODE(ENCODE(v)) with the original shape restored."""
+    qt = encode(v, levels, key, bucket_size=bucket_size, norm_type=norm_type)
+    return decode(qt, levels).reshape(v.shape)
+
+
+def quantization_variance(
+    v: jnp.ndarray,
+    levels: jnp.ndarray,
+    *,
+    bucket_size: int,
+    norm_type: str = NORM_L2,
+) -> jnp.ndarray:
+    """Exact E_h ||Q(v) - v||^2 (Eqs. 1–2): sum over coords of
+    ||v||^2 (l_{tau+1} - r)(r - l_tau)."""
+    r, norms = normalized_magnitudes(v, bucket_size, norm_type)
+    nlev = levels.shape[0]
+    tau = jnp.clip(jnp.searchsorted(levels, r, side="right") - 1, 0, nlev - 2)
+    lo, hi = levels[tau], levels[tau + 1]
+    per_coord = (hi - r) * (r - lo)
+    return jnp.sum(norms[:, None] ** 2 * per_coord)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_size", "norm_type"))
+def quantize_jit(v, levels, key, *, bucket_size, norm_type=NORM_L2):
+    return quantize(v, levels, key, bucket_size=bucket_size, norm_type=norm_type)

@@ -1,0 +1,131 @@
+"""Named quantization schemes: the paper's methods and all its baselines.
+
+A scheme is (initial levels, norm type, adaptivity rule).  The adaptive
+state threaded through training is a ``SchemeState`` pytree so that level
+updates happen *inside* the jitted train step on the paper's sparse
+schedule (iters ~100, ~2000, then every 10k — App. K "Update Schedule").
+
+Registry:
+  alq / alq_n       adaptive levels, coordinate descent   (Sec. 3.1, 3.4)
+  alq_gd / alq_gd_n adaptive levels, projection-free GD   (Sec. 3.2)
+  amq / amq_n       adaptive multiplier                   (Sec. 3.3)
+  alq_inf / amq_inf beyond-paper: adaptive levels under L-inf bucket
+                    normalization — combines QSGDinf's small norm factor
+                    with the adaptive grid; dominates QSGDinf on
+                    near-gaussian (transformer) gradients where the
+                    paper's L2-normalized ALQ does not (bench_variance)
+  qsgdinf           uniform levels, L-inf norm            [Alistarh+ 17]
+  nuqsgd            exponential p=0.5, L2 norm            [Ramezani-K.+ 19]
+  trn               ternary {0,1} + sign, L-inf           [Wen+ 17]
+  fp32 / super_sgd  no quantization (full-precision sync)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import adapt, levels as levels_lib
+from .quantize import NORM_L2, NORM_LINF
+from .stats import TruncNormStats
+
+ADAPTIVE_SCHEMES = ("alq", "alq_n", "alq_gd", "alq_gd_n", "amq", "amq_n",
+                    "alq_inf", "amq_inf")
+FIXED_SCHEMES = ("qsgdinf", "nuqsgd", "trn")
+ALL_SCHEMES = ADAPTIVE_SCHEMES + FIXED_SCHEMES + ("fp32", "super_sgd")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantScheme:
+    """Static configuration of a quantization method."""
+
+    name: str = "alq"
+    bits: int = 3
+    bucket_size: int = 8192
+    clip_sigmas: float = 0.0          # 0 = off; TRN uses 2.5 (Eq. 49)
+    max_stat_components: int = 64     # suff.-stat subsample (App. K)
+    alq_sweeps: int = 10
+    amq_gd_steps: int = 100
+
+    def __post_init__(self):
+        if self.name not in ALL_SCHEMES:
+            raise ValueError(f"unknown scheme {self.name!r}; known: {ALL_SCHEMES}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.name not in ("fp32", "super_sgd")
+
+    @property
+    def adaptive(self) -> bool:
+        return self.name in ADAPTIVE_SCHEMES
+
+    @property
+    def norm_type(self) -> str:
+        # L-inf for uniform/ternary grids (QSGDinf, TRN) and the
+        # beyond-paper *_inf adaptive variants; L2 otherwise (paper).
+        if self.name in ("qsgdinf", "trn") or self.name.endswith("_inf"):
+            return NORM_LINF
+        return NORM_L2
+
+    @property
+    def weighted_stats(self) -> bool:
+        """Norm^2-weighted mixture (Sec. 3.4) vs pooled ("-N" variants)."""
+        return self.adaptive and not self.name.endswith("_n")
+
+    @property
+    def _base(self) -> str:
+        return self.name.replace("_inf", "")
+
+    @property
+    def num_levels(self) -> int:
+        if self.name == "trn":
+            return 2
+        return levels_lib.num_levels(self.bits)
+
+    def init_levels(self) -> jnp.ndarray:
+        if self.name == "trn":
+            return levels_lib.ternary_levels()
+        if self.name in ("nuqsgd",) or self._base.startswith("amq"):
+            return levels_lib.exp_levels(self.bits, p=0.5)
+        # ALQ variants initialize from uniform (paper Sec. 3.1: either
+        # uniform or exponential init; CD converges from both).
+        return levels_lib.uniform_levels(self.bits)
+
+    def init_state(self) -> "SchemeState":
+        return SchemeState(
+            levels=self.init_levels(),
+            multiplier=jnp.asarray(0.5, jnp.float32),
+            num_updates=jnp.asarray(0, jnp.int32),
+        )
+
+    def update_state(self, state: "SchemeState", stats: TruncNormStats) -> "SchemeState":
+        """One level-adaptation step from fresh sufficient statistics."""
+        if not self.adaptive:
+            return state
+        if self._base.startswith("amq"):
+            p = adapt.amq_update(
+                state.multiplier, stats, bits=self.bits, steps=self.amq_gd_steps
+            )
+            lv = levels_lib.multiplier_to_levels(p, self.bits)
+            return SchemeState(lv, p, state.num_updates + 1)
+        if self._base.startswith("alq_gd"):
+            lv = adapt.alq_gd_update(state.levels, stats)
+        else:
+            lv = adapt.alq_update(state.levels, stats, sweeps=self.alq_sweeps)
+        return SchemeState(lv, state.multiplier, state.num_updates + 1)
+
+
+class SchemeState(NamedTuple):
+    """Adaptive-quantization state carried in the train state pytree."""
+
+    levels: jnp.ndarray
+    multiplier: jnp.ndarray
+    num_updates: jnp.ndarray
+
+
+def default_update_schedule(total_steps: int) -> tuple[int, ...]:
+    """Paper App. K: update at 100, 2000, then every 10k iterations."""
+    pts = [p for p in (100, 2000) if p < total_steps]
+    pts += list(range(10_000, total_steps, 10_000))
+    return tuple(pts)

@@ -1,0 +1,219 @@
+"""Sufficient statistics of normalized gradient coordinates.
+
+The paper models normalized coordinates ``r = |v_i|/||v||`` per *bucket*
+as truncated normals on [0, 1] (Appendix A.2) and forms the norm-weighted
+mixture CDF ``F(r) = sum_n gamma_n F_n(r)`` with
+``gamma_n = ||v_n||^2 / sum ||v_n||^2`` (Sec. 3.4) for the
+expected-variance objective, or a pooled single fit for the
+expected-*normalized*-variance ("-N") objective.
+
+Everything here is closed-form in (Phi, phi), so processors can update
+their quantization grids in parallel from a handful of scalars — this is
+the "efficiently computing sufficient statistics of a parametric
+distribution" part of Algorithm 1.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+_SQRT2PI = 2.5066282746310002
+_MIN_SIGMA = 1e-4  # PDF/CDF conditioning floor (paper App. K notes this)
+
+
+def _phi(z):
+    return jnp.exp(-0.5 * z * z) / _SQRT2PI
+
+
+def _Phi(z):
+    z = jnp.asarray(z, jnp.float32)
+    return 0.5 * (1.0 + jax.lax.erf(z / jnp.sqrt(2.0).astype(z.dtype)))
+
+
+class TruncNormStats(NamedTuple):
+    """A mixture of truncated normals on [0, 1].
+
+    Fields are vectors over mixture components (buckets, possibly
+    subsampled): location ``mu``, scale ``sigma`` of the *parent* normal,
+    and mixture weight ``gamma`` (sums to 1).
+    """
+
+    mu: jnp.ndarray
+    sigma: jnp.ndarray
+    gamma: jnp.ndarray
+
+    @property
+    def n_components(self) -> int:
+        return self.mu.shape[0]
+
+
+def _z(stats: TruncNormStats, x):
+    x = jnp.asarray(x)
+    return (x[..., None] - stats.mu) / stats.sigma
+
+
+def _normalizer(stats: TruncNormStats):
+    """Phi((1-mu)/sig) - Phi((0-mu)/sig), clamped away from zero."""
+    hi = _Phi((1.0 - stats.mu) / stats.sigma)
+    lo = _Phi((0.0 - stats.mu) / stats.sigma)
+    return jnp.maximum(hi - lo, 1e-12), lo
+
+
+def mixture_pdf(stats: TruncNormStats, x) -> jnp.ndarray:
+    """p(x) = sum_n gamma_n p_n(x) on [0, 1]."""
+    Z, _ = _normalizer(stats)
+    p = _phi(_z(stats, x)) / (stats.sigma * Z)
+    inside = (jnp.asarray(x)[..., None] >= 0.0) & (jnp.asarray(x)[..., None] <= 1.0)
+    p = jnp.where(inside, p, 0.0)
+    return jnp.sum(stats.gamma * p, axis=-1)
+
+
+def mixture_cdf(stats: TruncNormStats, x) -> jnp.ndarray:
+    """F(x) = sum_n gamma_n F_n(x); F(x<=0)=0, F(x>=1)=1."""
+    Z, lo = _normalizer(stats)
+    F = (_Phi(_z(stats, x)) - lo) / Z
+    F = jnp.clip(F, 0.0, 1.0)
+    return jnp.sum(stats.gamma * F, axis=-1)
+
+
+def _component_cdf(stats: TruncNormStats, x):
+    Z, lo = _normalizer(stats)
+    return jnp.clip((_Phi(_z(stats, x)) - lo) / Z, 0.0, 1.0)
+
+
+def _component_pdf(stats: TruncNormStats, x):
+    Z, _ = _normalizer(stats)
+    p = _phi(_z(stats, x)) / (stats.sigma * Z)
+    return p
+
+
+def partial_moment0(stats: TruncNormStats, a, c) -> jnp.ndarray:
+    """int_a^c dF(r) = F(c) - F(a)."""
+    return mixture_cdf(stats, c) - mixture_cdf(stats, a)
+
+
+def partial_moment1(stats: TruncNormStats, a, c) -> jnp.ndarray:
+    """int_a^c r dF(r), closed form per component:
+    mu (F(c)-F(a)) - sigma^2 (p(c)-p(a))  (paper App. B.1)."""
+    Fc, Fa = _component_cdf(stats, c), _component_cdf(stats, a)
+    pc, pa = _component_pdf(stats, c), _component_pdf(stats, a)
+    m1 = stats.mu * (Fc - Fa) - stats.sigma ** 2 * (pc - pa)
+    return jnp.sum(stats.gamma * m1, axis=-1)
+
+
+def partial_moment2(stats: TruncNormStats, a, c) -> jnp.ndarray:
+    """int_a^c r^2 dF(r):
+    mu*m1 + sigma^2 (F(c)-F(a)) - sigma^2 (c p(c) - a p(a))."""
+    a_, c_ = jnp.asarray(a), jnp.asarray(c)
+    Fc, Fa = _component_cdf(stats, c), _component_cdf(stats, a)
+    pc, pa = _component_pdf(stats, c), _component_pdf(stats, a)
+    m1 = stats.mu * (Fc - Fa) - stats.sigma ** 2 * (pc - pa)
+    m2 = stats.mu * m1 + stats.sigma ** 2 * (Fc - Fa) - stats.sigma ** 2 * (
+        c_[..., None] * pc - a_[..., None] * pa
+    )
+    return jnp.sum(stats.gamma * m2, axis=-1)
+
+
+def mixture_inverse_cdf(stats: TruncNormStats, y, iters: int = 50) -> jnp.ndarray:
+    """F^{-1}(y) by bisection on [0, 1] (mixture CDF has no closed inverse).
+
+    For a single component this agrees with the closed form
+    sigma * ndtri(ybar) + mu (App. A.2); tested against it.
+    """
+    y = jnp.asarray(y)
+    lo = jnp.zeros_like(y)
+    hi = jnp.ones_like(y)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        below = mixture_cdf(stats, mid) < y
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def single_trunc_norm_inverse_cdf(mu, sigma, y):
+    """Closed-form inverse for one truncated normal (App. A.2, Eq. 18)."""
+    Phi_a = _Phi((0.0 - mu) / sigma)
+    Phi_b = _Phi((1.0 - mu) / sigma)
+    ybar = (Phi_b - Phi_a) * y + Phi_a
+    return sigma * ndtri(jnp.clip(ybar, 1e-12, 1.0 - 1e-12)) + mu
+
+
+def expected_variance(stats: TruncNormStats, levels: jnp.ndarray) -> jnp.ndarray:
+    """Psi(l) = sum_j int_{l_j}^{l_{j+1}} (l_{j+1}-r)(r-l_j) dF(r)  (Eq. 3).
+
+    With the norm^2-weighted mixture this is the expected-variance
+    objective of Sec. 3.4 (up to the constant sum ||v_n||^2); with a
+    pooled/uniform-weight fit it is the expected normalized variance.
+    """
+    a = levels[:-1]
+    c = levels[1:]
+    m0 = partial_moment0(stats, a, c)
+    m1 = partial_moment1(stats, a, c)
+    m2 = partial_moment2(stats, a, c)
+    # (c - r)(r - a) = -r^2 + (a + c) r - a c
+    seg = -m2 + (a + c) * m1 - a * c * m0
+    return jnp.sum(seg)
+
+
+def fit_bucket_stats(
+    r: jnp.ndarray,
+    bucket_norms: jnp.ndarray,
+    *,
+    weighted: bool = True,
+    max_components: int = 64,
+    mask: jnp.ndarray | None = None,
+) -> TruncNormStats:
+    """Fit per-bucket (mu, sigma) of normalized magnitudes.
+
+    Args:
+      r: (num_buckets, bucket_size) normalized magnitudes in [0, 1].
+      bucket_norms: (num_buckets,) the Lq norms used to normalize.
+      weighted: True -> gamma_n ∝ ||v_n||^2 (ALQ/AMQ, Sec 3.4);
+                False -> uniform gamma (ALQ-N/AMQ-N).
+      max_components: strided subsample of buckets to keep the update
+        cheap (paper App. K uses 20–350 samples).
+      mask: optional (num_buckets, bucket_size) validity mask (padding).
+    """
+    if mask is None:
+        mu = jnp.mean(r, axis=1)
+        var = jnp.var(r, axis=1)
+    else:
+        cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+        mu = jnp.sum(r * mask, axis=1) / cnt
+        var = jnp.sum(mask * (r - mu[:, None]) ** 2, axis=1) / cnt
+    sigma = jnp.maximum(jnp.sqrt(var), _MIN_SIGMA)
+
+    nb = mu.shape[0]
+    if nb > max_components:
+        stride = nb // max_components
+        idx = jnp.arange(max_components) * stride
+        mu, sigma, bucket_norms = mu[idx], sigma[idx], bucket_norms[idx]
+
+    if weighted:
+        w = bucket_norms ** 2
+    else:
+        w = jnp.ones_like(bucket_norms)
+    gamma = w / jnp.maximum(jnp.sum(w), 1e-30)
+    return TruncNormStats(mu=mu, sigma=sigma, gamma=gamma)
+
+
+def merge_stats(stats: TruncNormStats, axis_name) -> TruncNormStats:
+    """Combine sufficient statistics across data-parallel workers.
+
+    Each worker contributes its mixture components; weights are
+    renormalized globally.  Implemented as an all_gather of the (tiny)
+    component vectors — this is the only extra communication the adaptive
+    methods add (Algorithm 1, line 4).
+    """
+    mu = jax.lax.all_gather(stats.mu, axis_name, tiled=True)
+    sigma = jax.lax.all_gather(stats.sigma, axis_name, tiled=True)
+    gamma = jax.lax.all_gather(stats.gamma, axis_name, tiled=True)
+    gamma = gamma / jnp.maximum(jnp.sum(gamma), 1e-30)
+    return TruncNormStats(mu=mu, sigma=sigma, gamma=gamma)

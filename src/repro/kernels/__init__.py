@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the quantization hot path (+ jnp oracles)."""
+from .ops import bucket_stats_op, dequantize_op, quantize_op
+from .quantize import quantize_pallas
+from .dequantize import dequantize_pallas
+from .bucket_stats import bucket_stats_pallas

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: fused bucket-norm + normalize + stochastic round.
+
+This is the per-step encode hot path of Algorithm 1 (line 6).  On GPU the
+paper uses a CUDA kernel; the TPU adaptation tiles *buckets* into VMEM:
+
+  grid      = (num_buckets // BUCKET_TILE,)
+  v block   = (BUCKET_TILE, bucket_size)   f32 in VMEM
+  u block   = (BUCKET_TILE, bucket_size)   f32 in VMEM (pre-drawn uniforms;
+              randomness is an explicit input so the kernel is a pure
+              function and bit-identical to the oracle)
+  levels    = (num_levels,)                full, replicated to every tile
+  codes out = (BUCKET_TILE, bucket_size)   int8
+  norms out = (BUCKET_TILE,)               f32
+
+The bucket reduction (norm) runs on the VPU along lanes; the level search
+is a broadcast compare against the (tiny) level vector — no gather, no
+sort, MXU stays free for the overlapping backward matmuls.  A bucket is
+always resident in one tile (bucket_size is the minor, lane-aligned dim;
+8192 = 64 lanes * 128 sublanes exactly fills a VREG-friendly tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantize import NORM_L2, NORM_LINF
+
+DEFAULT_BUCKET_TILE = 8
+
+
+def _quantize_kernel(v_ref, u_ref, levels_ref, codes_ref, norms_ref, *, norm_type: str):
+    v = v_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    levels = levels_ref[...]
+
+    if norm_type == NORM_L2:
+        norm = jnp.sqrt(jnp.sum(v * v, axis=-1))
+    elif norm_type == NORM_LINF:
+        norm = jnp.max(jnp.abs(v), axis=-1)
+    else:
+        raise ValueError(norm_type)
+
+    safe = jnp.where(norm > 0, norm, 1.0)
+    r = jnp.clip(jnp.abs(v) / safe[:, None], 0.0, 1.0)
+
+    # level search: tau = (#levels <= r) - 1, via broadcast compare.
+    tau = jnp.sum(
+        (r[..., None] >= levels[None, None, :]).astype(jnp.int32), axis=-1
+    ) - 1
+    tau = jnp.clip(tau, 0, levels.shape[0] - 2)
+
+    # gather-free level lookup: one-hot contraction against the level vec.
+    nlev = levels.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, r.shape + (nlev,), len(r.shape))
+    onehot_lo = (iota == tau[..., None]).astype(jnp.float32)
+    onehot_hi = (iota == (tau + 1)[..., None]).astype(jnp.float32)
+    lo = jnp.sum(onehot_lo * levels[None, None, :], axis=-1)
+    hi = jnp.sum(onehot_hi * levels[None, None, :], axis=-1)
+
+    rho = (r - lo) / jnp.maximum(hi - lo, 1e-30)
+    idx = tau + (u < rho).astype(jnp.int32)
+    sign = jnp.where(v > 0, 1, jnp.where(v < 0, -1, 0))
+
+    codes_ref[...] = (idx * sign).astype(jnp.int16)
+    norms_ref[...] = norm
+
+
+@functools.partial(
+    jax.jit, static_argnames=("norm_type", "bucket_tile", "interpret")
+)
+def quantize_pallas(
+    vb: jnp.ndarray,
+    u: jnp.ndarray,
+    levels: jnp.ndarray,
+    *,
+    norm_type: str = NORM_L2,
+    bucket_tile: int = DEFAULT_BUCKET_TILE,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize bucketed gradients; returns (codes int8, norms f32).
+
+    vb, u: (num_buckets, bucket_size).  num_buckets must be divisible by
+    bucket_tile (callers pad; repro.dist.sync does).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    nb, bs = vb.shape
+    bucket_tile = min(bucket_tile, nb)
+    if nb % bucket_tile:
+        raise ValueError(f"num_buckets {nb} % bucket_tile {bucket_tile} != 0")
+    grid = (nb // bucket_tile,)
+    kernel = functools.partial(_quantize_kernel, norm_type=norm_type)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bucket_tile, bs), lambda i: (i, 0)),
+            pl.BlockSpec((bucket_tile, bs), lambda i: (i, 0)),
+            pl.BlockSpec(levels.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bucket_tile, bs), lambda i: (i, 0)),
+            pl.BlockSpec((bucket_tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bs), jnp.int16),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vb, u, levels)

@@ -1,0 +1,166 @@
+"""Analytic per-device cost model from the jaxpr (dry-run roofline input).
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE, so with scan-over-
+layers the compiled ``cost_analysis()`` under-reports FLOPs by ~the layer
+count.  This walker traverses the closed jaxpr instead, multiplying
+nested ``scan`` bodies by their (static) trip count, and accounts:
+
+  * flops: dot_general (2*b*m*n*k), conv, plus 1 flop per output element
+    for elementwise/reduce ops (coarse but sub-dominant);
+  * hbm bytes: operand+result bytes of every tensor op, i.e. an
+    un-fused upper bound on HBM traffic (documented in EXPERIMENTS.md);
+  * collective wire bytes by primitive (psum weighted 2x for its ring
+    reduce+broadcast; gathers/all_to_alls 1x) — including collectives
+    *inside* scans, which HLO-text parsing misses.
+
+All numbers are per device: inside shard_map the jaxpr shapes are the
+per-device block shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+
+ELEMENTWISE_FLOP_PRIMS = {
+    "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "pow", "integer_pow", "neg", "abs",
+    "erf", "cumsum", "cumlogsumexp", "select_n", "clamp", "and", "or",
+    "xor", "not", "sign", "floor", "ceil", "round", "is_finite", "erf_inv",
+}
+REDUCE_PRIMS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                "reduce_and", "reduce_or", "argmax", "argmin"}
+# wire-weight per collective primitive
+COLLECTIVE_WEIGHTS = {
+    "psum": 2.0,            # ring all-reduce: reduce-scatter + all-gather
+    "psum_invariant": 2.0,
+    "all_gather": 1.0,
+    "all_to_all": 1.0,
+    "reduce_scatter": 1.0,
+    "ppermute": 1.0,
+    "pmax": 2.0,
+    "pmin": 2.0,
+}
+# HBM-traffic model: with XLA fusion, elementwise chains fold into their
+# producing/consuming matmuls, so we charge bytes only for "major" ops
+# (matmul/conv operands+results, gathers/scatters, sorts, reductions) —
+# a fused-traffic estimate rather than an unfused upper bound.
+MAJOR_BYTES_PRIMS = {
+    "dot_general", "conv_general_dilated", "gather", "scatter",
+    "scatter-add", "scatter_add", "sort", "top_k", "cumsum",
+    "dynamic_slice", "dynamic_update_slice",
+} | REDUCE_PRIMS
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _nelems(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 0
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.by_collective.items():
+            self.by_collective[k] = self.by_collective.get(k, 0.0) + v * mult
+
+
+def _dot_flops(eqn) -> float:
+    (lhs, rhs), out = eqn.invars, eqn.outvars[0]
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    lshape = lhs.aval.shape
+    k = math.prod(lshape[i] for i in lc) if lc else 1
+    return 2.0 * _nelems(out.aval) * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval  # kernel
+    # flops = 2 * out_elems * (kernel spatial x in-channels)
+    k = math.prod(rhs.shape[:-1]) if rhs.shape else 1
+    return 2.0 * _nelems(out) * k
+
+
+def _eqn_cost(eqn) -> Cost:
+    c = Cost()
+    prim = eqn.primitive.name
+
+    if prim == "dot_general":
+        c.flops = _dot_flops(eqn)
+    elif prim in ("conv_general_dilated",):
+        c.flops = _conv_flops(eqn)
+    elif prim in ELEMENTWISE_FLOP_PRIMS:
+        c.flops = float(sum(_nelems(o.aval) for o in eqn.outvars))
+    elif prim in REDUCE_PRIMS:
+        c.flops = float(sum(_nelems(i.aval) for i in eqn.invars))
+
+    if prim in COLLECTIVE_WEIGHTS:
+        # payload = max(in, out): all_gather's wire ~ its (big) output,
+        # reduce_scatter's ~ its (big) input, psum/all_to_all in == out.
+        payload = max(
+            sum(_nbytes(o.aval) for o in eqn.outvars),
+            sum(_nbytes(i.aval) for i in eqn.invars if hasattr(i, "aval")),
+        )
+        wire = payload * COLLECTIVE_WEIGHTS[prim]
+        c.collective_bytes = wire
+        c.by_collective[prim] = wire
+    elif prim in MAJOR_BYTES_PRIMS:
+        c.hbm_bytes = float(
+            sum(_nbytes(i.aval) for i in eqn.invars if hasattr(i, "aval"))
+            + sum(_nbytes(o.aval) for o in eqn.outvars))
+    return c
+
+
+def _walk(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            inner = _walk(eqn.params["jaxpr"].jaxpr)
+            total.add(inner, mult=float(eqn.params["length"]))
+        elif prim == "while":
+            # trip count unknown statically; count the body once and the
+            # caller should avoid unbounded whiles on hot paths (we do).
+            inner = _walk(eqn.params["body_jaxpr"].jaxpr)
+            total.add(inner, mult=1.0)
+        elif prim == "cond":
+            branches = [_walk(b.jaxpr) for b in eqn.params["branches"]]
+            # worst-case branch
+            worst = max(branches, key=lambda b: b.flops + b.hbm_bytes,
+                        default=Cost())
+            total.add(worst)
+        elif "jaxpr" in eqn.params:
+            sub = eqn.params["jaxpr"]
+            total.add(_walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub))
+        elif "call_jaxpr" in eqn.params:
+            sub = eqn.params["call_jaxpr"]
+            total.add(_walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub))
+        else:
+            total.add(_eqn_cost(eqn))
+    return total
+
+
+def analyze_fn(fn, *args) -> Cost:
+    """Per-device analytic cost of `fn(*args)` (fn already shard_mapped —
+    shapes inside the shard_map body are per-device)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return _walk(jaxpr.jaxpr)

@@ -1,0 +1,110 @@
+"""Training launcher.
+
+On real hardware this drives the production mesh; on CPU it runs the
+reduced (smoke) configs end-to-end — same code path, mesh (dp, tp) built
+from whatever devices exist.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --smoke --scheme alq --bits 3 --steps 50 --sync all_gather
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.core.schemes import QuantScheme
+from repro.launch.mesh import make_local_mesh, mesh_axes
+from repro.models.transformer import Model
+from repro.train import checkpoint
+from repro.train.data import DataConfig, Pipeline
+from repro.train.optim import OptimConfig
+from repro.train.train_step import (
+    TrainConfig, TrainState, init_train_state, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-proxy")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config for this arch")
+    ap.add_argument("--scheme", default="alq")
+    ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--bucket", type=int, default=1024)
+    ap.add_argument("--sync", default="all_gather",
+                    choices=["fp32", "all_gather", "two_phase"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optim", default="adamw", choices=["sgdm", "adamw"])
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--update-at", default="2,10")
+    ap.add_argument("--save", default="")
+    ap.add_argument("--use-pallas", action="store_true", default=False)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    mesh = make_local_mesh(tp=args.tp)
+    data_axes, model_axis = mesh_axes(mesh)
+    tp = mesh.shape[model_axis]
+    dp = mesh.size // tp
+    model = Model(cfg, tp=tp, dp=dp, data_axes=data_axes)
+
+    scheme = QuantScheme(name=args.scheme, bits=args.bits,
+                         bucket_size=args.bucket)
+    tcfg = TrainConfig(
+        scheme=scheme,
+        optim=OptimConfig(name=args.optim, lr=args.lr, weight_decay=0.0),
+        sync_mode=args.sync,
+        update_milestones=tuple(int(x) for x in args.update_at.split(",")),
+        update_every=0, microbatches=args.micro,
+        use_pallas=args.use_pallas)
+    step_fn = make_train_step(model, tcfg, data_axes=data_axes)
+
+    pipe = Pipeline(DataConfig(kind="markov", vocab_size=cfg.vocab_size,
+                               seq_len=args.seq, global_batch=args.batch))
+    pspecs = model.param_specs()
+    bspec = P(data_axes)
+    with jax.set_mesh(mesh):
+        state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+        sspecs = TrainState(
+            params=pspecs,
+            opt=type(state.opt)(
+                mu=pspecs,
+                nu=None if state.opt.nu is None else pspecs, count=P()),
+            scheme_state=jax.tree.map(lambda _: P(), state.scheme_state),
+            step=P(), rng=P())
+        in_specs = (sspecs, {"ids": bspec, "labels": bspec})
+        mspecs = jax.tree.map(lambda _: P(), {
+            "loss": 0, "grad_norm": 0, "comm_bits_per_coord": 0,
+            "quant_error": 0})
+        train = jax.jit(jax.shard_map(step_fn, in_specs=in_specs,
+                                      out_specs=(sspecs, mspecs),
+                                      check_vma=False))
+        t0 = time.time()
+        for t in range(args.steps):
+            state, metrics = train(state, pipe.batch(t))
+            if t % 5 == 0 or t == args.steps - 1:
+                print(f"step {t:4d} loss={float(metrics['loss']):.4f} "
+                      f"|g|={float(metrics['grad_norm']):.3f} "
+                      f"bits/coord={float(metrics['comm_bits_per_coord']):.1f} "
+                      f"levels={np.asarray(state.scheme_state.levels)[:4].round(3)}",
+                      flush=True)
+        dt = time.time() - t0
+        print(f"done: {args.steps} steps in {dt:.1f}s "
+              f"({dt / args.steps * 1e3:.0f} ms/step)")
+        if args.save:
+            checkpoint.save(args.save, state.params)
+            print(f"saved params to {args.save}")
+
+
+if __name__ == "__main__":
+    main()

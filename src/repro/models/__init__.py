@@ -1,0 +1,4 @@
+"""Model zoo: composable decoder stacks for the assigned architectures."""
+from .config import ModelConfig
+from .layers import TPCtx, make_dims
+from .transformer import Model

@@ -1,0 +1,384 @@
+"""Attention: GQA with RoPE, qk-norm, qkv-bias; full / sliding-window /
+chunked variants; cross-attention (VLM); decode against a
+sequence-sharded KV cache.
+
+Sharding scheme (see layers.Dims): query heads are sharded over the
+``model`` axis (zero-padded to a multiple of tp, masked after attention);
+the small GQA kv projection is replicated so every q head's kv head is
+device-local for any (heads, kv, tp) combination.  Decode KV caches are
+sharded along the *sequence* dim over ``model`` (and optionally the data
+axes for batch-1 long-context); partial softmax statistics are combined
+flash-style with pmax/psum — "sequence-parallel decode attention".
+
+Training/prefill attention is a flash-style two-level loop in jnp:
+``lax.map`` over query blocks, ``lax.while_loop`` with a *dynamic* trip
+count over kv blocks, so causal/windowed FLOPs are exact and the live
+working set is one (q_block, kv_block) tile per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import CHUNKED, FULL, SLIDING, ModelConfig
+from .layers import Dims, TPCtx, dense_init, head_mask, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def attn_param_specs(cfg: ModelConfig, dims: Dims, cross: bool = False):
+    d = cfg.d_model
+    hd = dims.head_dim
+    nkv = dims.n_kv_heads
+    specs = {
+        "wq": ((d, dims.heads_local * hd), d),
+        "wk": ((d, nkv * hd), d),
+        "wv": ((d, nkv * hd), d),
+        "wo": ((dims.heads_local * hd, d), dims.n_heads * hd),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = ((dims.heads_local * hd,), 0)
+        specs["bk"] = ((nkv * hd,), 0)
+        specs["bv"] = ((nkv * hd,), 0)
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = ((hd,), -1)
+        specs["k_norm"] = ((hd,), -1)
+    if cross:
+        specs["gate"] = ((1,), 0)  # tanh-gated cross-attn (llama3.2-vision)
+    return specs
+
+
+def init_params(key, specs, dtype):
+    params = {}
+    for i, (name, (shape, in_dim)) in enumerate(sorted(specs.items())):
+        k = jax.random.fold_in(key, i)
+        if in_dim == -1:   # norm weight
+            params[name] = jnp.ones(shape, dtype)
+        elif in_dim == 0:  # bias / gate
+            params[name] = jnp.zeros(shape, dtype)
+        else:
+            params[name] = dense_init(k, shape, in_dim, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def _project_qkv(ctx, cfg, dims, p, x, xkv, positions, kv_positions=None,
+                 use_rope=True):
+    """x: (B,S,d) -> q (B,S,Hl,hd); k,v (B,Skv,KV,hd) (kv replicated)."""
+    B, S, _ = x.shape
+    hd = dims.head_dim
+    q = x @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, dims.heads_local, hd)
+    k = k.reshape(B, xkv.shape[1], dims.n_kv_heads, hd)
+    v = v.reshape(B, xkv.shape[1], dims.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = rope(k, kpos, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(ctx, dims: Dims, cfg: ModelConfig, k, v):
+    """kv (B,S,KV,hd) -> one kv head per *local* q head (gather)."""
+    ratio = max(1, cfg.num_heads // cfg.num_kv_heads)
+    global_q = ctx.tp_rank() * dims.heads_local + jnp.arange(dims.heads_local)
+    idx = jnp.minimum(global_q // ratio, dims.n_kv_heads - 1)
+    return jnp.take(k, idx, axis=2), jnp.take(v, idx, axis=2)
+
+
+def _expand_kv_all_heads(cfg: ModelConfig, dims: Dims, k, v):
+    """kv (B,S,KV,hd) -> one kv head per *global* (padded) q head."""
+    ratio = max(1, cfg.num_heads // cfg.num_kv_heads)
+    idx = jnp.minimum(jnp.arange(dims.n_heads) // ratio,
+                      dims.n_kv_heads - 1)
+    return jnp.take(k, idx, axis=2), jnp.take(v, idx, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+MAX_Q_BLOCKS = 32
+
+
+def _flash(q, k, v, *, causal: bool, window: int, q_block: int, kv_block: int):
+    """q: (B,S,H,hd); k,v: (B,Skv,H,hd) head-expanded. window<=0: unlimited.
+
+    Static Python loop over query blocks (bounded to MAX_Q_BLOCKS so HLO
+    stays O(32) regardless of S); per q block a ``lax.scan`` over exactly
+    the kv blocks the causal/window structure admits — bounds are static,
+    so FLOPs are exact *and* the whole thing is reverse-differentiable.
+    """
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    q_block = min(max(q_block, -(-S // MAX_Q_BLOCKS)), S)
+    while S % q_block:
+        q_block += 1
+    kv_block = min(kv_block, Skv)
+    if Skv % kv_block:
+        # e.g. cross-attention over 1601 image tokens: fall back to a
+        # single kv block (non-power-of-two kv extents are small in
+        # practice — modality frontends)
+        kv_block = Skv
+    nq = S // q_block
+    nkv = Skv // kv_block
+    scale = hd ** -0.5
+    qt = q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale  # (B,H,S,hd)
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    outs = []
+    for qi in range(nq):
+        q_start = qi * q_block
+        qb = jax.lax.slice_in_dim(qt, q_start, q_start + q_block, axis=2)
+
+        hi = min(-(-(q_start + q_block) // kv_block), nkv) if causal else nkv
+        lo = max((q_start - window) // kv_block, 0) if window > 0 else 0
+
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, hd), jnp.float32)
+
+        def kv_step(carry, ki, q_start=q_start, qb=qb):
+            m, l, acc = carry
+            k_start = ki * kv_block
+            kb = jax.lax.dynamic_slice_in_dim(kt, k_start, kv_block, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vt, k_start, kv_block, axis=2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb)
+            qpos = q_start + jnp.arange(q_block)
+            kpos = k_start + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(lo, hi))
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+
+    out = jnp.concatenate(outs, axis=2)  # (B,H,S,hd)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attn_forward(
+    ctx: TPCtx,
+    cfg: ModelConfig,
+    dims: Dims,
+    p,
+    x,
+    positions,
+    kind: str,
+    *,
+    return_cache: bool = False,
+    max_len: int = 0,
+    cache_shards: int = 1,
+    seq_shard_axes: tuple = ("model",),
+    q_block: int = 512,
+    kv_block: int = 512,
+):
+    """Self-attention for train/prefill. Returns (out, cache | None).
+
+    cache: (k_shard, v_shard) — this device's slice of the ring-addressed
+    decode cache (C = max_len for FULL, window/chunk otherwise; slot =
+    position % C, shard slot // C_local owns it), RoPE already applied,
+    layout (B, C_local, KV, hd).  Matches attn_decode's addressing.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(ctx, cfg, dims, p, x, x, positions)
+    ke, ve = _expand_kv(ctx, dims, cfg, k, v)
+
+    if kind == CHUNKED and S > cfg.chunk:
+        c = cfg.chunk
+        n_full = S // c
+        body_len = n_full * c
+
+        def fold(t):
+            return t.reshape(B * n_full, c, *t.shape[2:])
+
+        out = _flash(fold(q[:, :body_len]), fold(ke[:, :body_len]),
+                     fold(ve[:, :body_len]), causal=True, window=0,
+                     q_block=q_block, kv_block=kv_block)
+        out = out.reshape(B, body_len, dims.heads_local, dims.head_dim)
+        if body_len < S:  # trailing partial chunk (its own causal block)
+            tail = _flash(q[:, body_len:], ke[:, body_len:], ve[:, body_len:],
+                          causal=True, window=0, q_block=q_block,
+                          kv_block=kv_block)
+            out = jnp.concatenate([out, tail], axis=1)
+    else:
+        window = cfg.window if kind == SLIDING else 0
+        out = _flash(q, ke, ve, causal=True, window=window,
+                     q_block=q_block, kv_block=kv_block)
+
+    out = out * head_mask(ctx, cfg, dims)[None, None, :, None].astype(out.dtype)
+    y = ctx.psum_tp(out.reshape(B, S, -1) @ p["wo"])
+
+    cache = None
+    if return_cache:
+        C, C_local = cache_spec(cfg, dims, kind, max_len or S, cache_shards)
+        shard_id = jnp.zeros((), jnp.int32)
+        for ax in seq_shard_axes:
+            shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        keep = min(C, S)
+        t = jnp.arange(S - keep, S)
+        slot = t % C
+        owner = slot // C_local
+        mine = owner == shard_id
+        local_slot = jnp.where(mine, slot % C_local, C_local)  # OOB -> drop
+        kk = jnp.zeros((B, C_local, dims.n_kv_heads, dims.head_dim), k.dtype)
+        vv = jnp.zeros_like(kk)
+        kk = kk.at[:, local_slot].set(k[:, S - keep:], mode="drop")
+        vv = vv.at[:, local_slot].set(v[:, S - keep:], mode="drop")
+        cache = (kk, vv)
+    return y, cache
+
+
+def cross_attn_forward(ctx, cfg, dims, p, x, vision_states):
+    """Gated cross-attention against (B, S_img, d) vision embeddings."""
+    B, S, _ = x.shape
+    pos = jnp.zeros((B, S), jnp.int32)
+    q, k, v = _project_qkv(ctx, cfg, dims, p, x, vision_states, pos,
+                           use_rope=False)
+    ke, ve = _expand_kv(ctx, dims, cfg, k, v)
+    out = _flash(q, ke, ve, causal=False, window=0, q_block=512, kv_block=512)
+    out = out * head_mask(ctx, cfg, dims)[None, None, :, None].astype(out.dtype)
+    y = ctx.psum_tp(out.reshape(B, S, -1) @ p["wo"])
+    return jnp.tanh(p["gate"]).astype(y.dtype) * y
+
+
+# ---------------------------------------------------------------------------
+# decode: one token vs a sequence-sharded cache
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, dims: Dims, kind: str, max_len: int,
+               shards: int):
+    """(C_global, C_local) cache slots for one attention layer."""
+    if kind == SLIDING:
+        C = min(cfg.window, max_len)
+    elif kind == CHUNKED:
+        C = min(cfg.chunk, max_len)
+    else:
+        C = max_len
+    C = -(-C // shards) * shards
+    return C, C // shards
+
+
+def attn_decode(
+    ctx: TPCtx,
+    cfg: ModelConfig,
+    dims: Dims,
+    p,
+    x,            # (B, 1, d)
+    pos,          # (B,) absolute position of the new token
+    cache,        # (k, v): (B, C_local, KV, hd) this device's seq shard
+    kind: str,
+    *,
+    cache_shards: int,
+    seq_shard_axes: tuple = ("model",),
+):
+    """One-token decode. Returns (out (B,1,d), new (k,v) cache shards).
+
+    The global cache has C = C_local * cache_shards slots, ring-addressed
+    by ``slot = pos % C``; shard ``slot // C_local`` owns the write.
+    Validity and (for sliding/chunked) window masks are evaluated from the
+    absolute position each slot last stored.
+    """
+    B = x.shape[0]
+    hd = dims.head_dim
+    q, k_new, v_new = _project_qkv(ctx, cfg, dims, p, x, x, pos[:, None])
+    # q heads are TP-sharded but the cache is *sequence*-sharded over the
+    # same axis: gather the (tiny) decode q so every rank evaluates ALL
+    # heads against its sequence shard; the psum below then combines
+    # pure sequence-partial stats.  Local heads are sliced back before
+    # the row-parallel output projection.
+    q = jax.lax.all_gather(q, ctx.model_axis, axis=2, tiled=True)
+    H = q.shape[2]  # padded global head count
+    k_cache, v_cache = cache
+    C_local = k_cache.shape[1]
+    C = C_local * cache_shards
+
+    # --- shard id along the sequence sharding axes ---
+    shard_id = jnp.zeros((), jnp.int32)
+    for ax in seq_shard_axes:
+        shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+
+    # --- write the new token into its ring slot (owner shard only) ---
+    slot = (pos % C).astype(jnp.int32)              # (B,)
+    owner = slot // C_local
+    local_slot = slot % C_local
+    is_mine = (owner == shard_id)[:, None, None]
+    bidx = jnp.arange(B)
+    k_upd = k_cache.at[bidx, local_slot].set(
+        jnp.where(is_mine, k_new[:, 0], k_cache[bidx, local_slot]))
+    v_upd = v_cache.at[bidx, local_slot].set(
+        jnp.where(is_mine, v_new[:, 0], v_cache[bidx, local_slot]))
+
+    # --- absolute position stored in each local slot (post-write) ---
+    gslot = shard_id * C_local + jnp.arange(C_local)          # (C_local,)
+    delta = (pos[:, None] % C) - gslot[None, :]
+    delta = jnp.where(delta < 0, delta + C, delta)
+    slot_pos = pos[:, None] - delta                            # (B, C_local)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if kind == SLIDING:
+        valid &= slot_pos > pos[:, None] - cfg.window
+    elif kind == CHUNKED:
+        valid &= slot_pos >= (pos[:, None] // cfg.chunk) * cfg.chunk
+    # exclude the just-written slot from the shard pass; the new token is
+    # folded in exactly once below.
+    valid &= slot_pos != pos[:, None]
+
+    ke, ve = _expand_kv_all_heads(cfg, dims, k_upd, v_upd)     # (B,Cl,H,hd)
+    s = jnp.einsum("bqhd,bchd->bhqc", q.astype(jnp.float32) * hd ** -0.5,
+                   ke.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)                                    # (B,H,1)
+    for ax in seq_shard_axes:
+        m = jax.lax.pmax(m, ax)
+    ps = jnp.exp(s - m[..., None])
+    l = jnp.sum(ps, axis=-1)
+    acc = jnp.einsum("bhqc,bchd->bhqd", ps, ve.astype(jnp.float32))
+    for ax in seq_shard_axes:
+        l = jax.lax.psum(l, ax)
+        acc = jax.lax.psum(acc, ax)
+
+    # fold in the new token's own (k, v) — always visible to itself
+    ke_new, ve_new = _expand_kv_all_heads(cfg, dims, k_new, v_new)
+    s_new = jnp.einsum("bqhd,bqhd->bhq", q.astype(jnp.float32) * hd ** -0.5,
+                       ke_new.astype(jnp.float32))
+    m2 = jnp.maximum(m, s_new)
+    corr = jnp.exp(m - m2)
+    pn = jnp.exp(s_new - m2)
+    l2 = l * corr + pn
+    acc2 = acc * corr[..., None] + pn[..., None] * ve_new.astype(
+        jnp.float32).transpose(0, 2, 1, 3)
+    out = (acc2 / jnp.maximum(l2, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+
+    # back to this rank's local heads for the row-parallel output proj
+    start = ctx.tp_rank() * dims.heads_local
+    out = jax.lax.dynamic_slice_in_dim(out, start, dims.heads_local, axis=2)
+    out = out * head_mask(ctx, cfg, dims)[None, None, :, None]
+    y = ctx.psum_tp(out.reshape(B, 1, -1).astype(x.dtype) @ p["wo"])
+    return y, (k_upd, v_upd)

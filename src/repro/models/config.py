@@ -1,0 +1,180 @@
+"""Model configuration covering all six assigned architecture families.
+
+One ``ModelConfig`` describes dense / MoE / SSM (RWKV6, Mamba) / hybrid /
+VLM / audio decoder stacks.  Layer heterogeneity (Jamba's 1:7
+attn:mamba interleave, Llama-3.2-Vision's cross-attention every 5th
+layer, Llama-4's chunked-attention 3:1 pattern, Jamba's MoE-every-other
+layer) is expressed as a repeating *group* of ``group_size`` layer slots;
+the whole stack is ``num_layers // group_size`` repetitions of that group
+and is executed with one ``lax.scan`` over stacked group parameters (so
+HLO size is O(group), not O(layers)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# layer-slot kinds
+ATTN = "attn"
+MAMBA = "mamba"
+RWKV = "rwkv"
+CROSS = "cross"  # cross-attention (VLM) — always paired with self-attn slot
+
+# attention kinds
+FULL = "full"
+SLIDING = "sliding"
+CHUNKED = "chunked"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str            # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0         # 0 -> d_model // num_heads
+
+    # attention flavour
+    attn_kind: str = FULL     # full | sliding | chunked
+    window: int = 4096        # sliding-window size
+    chunk: int = 8192         # chunked-attention chunk
+    full_attn_every: int = 0  # >0: every k-th attn layer is FULL (llama4 iRoPE)
+    qk_norm: bool = False     # qwen3
+    qkv_bias: bool = False    # qwen1.5
+    rope_theta: float = 1e6
+
+    # mixture of experts
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 2
+    moe_every: int = 1        # MoE FFN on every k-th layer (jamba: 2)
+    shared_expert: bool = False  # llama4
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # hybrid / ssm
+    layer_pattern: str = ATTN  # attn | rwkv | mamba_hybrid
+    attn_every: int = 0        # hybrid: attention slot every k-th layer (jamba: 8)
+    mamba_d_state: int = 16
+    mamba_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0     # 0 -> ceil(d_model / 16)
+    rwkv_head_dim: int = 64
+
+    # vlm
+    cross_attn_every: int = 0  # self-attn layers per cross-attn layer (llama3.2: 5)
+    num_image_tokens: int = 1601
+
+    # numerics
+    norm_eps: float = 1e-5
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    # source citation (public pool requirement)
+    source: str = ""
+
+    # ----- derived ------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def group_size(self) -> int:
+        """Length of the repeating layer pattern."""
+        g = 1
+        if self.attn_every:
+            g = math.lcm(g, self.attn_every)
+        if self.cross_attn_every:
+            g = math.lcm(g, self.cross_attn_every)
+        if self.moe and self.moe_every > 1:
+            g = math.lcm(g, self.moe_every)
+        if self.full_attn_every:
+            g = math.lcm(g, self.full_attn_every)
+        return g
+
+    @property
+    def num_groups(self) -> int:
+        if self.num_layers % self.group_size:
+            raise ValueError(
+                f"{self.name}: num_layers {self.num_layers} not divisible by "
+                f"group_size {self.group_size}"
+            )
+        return self.num_layers // self.group_size
+
+    def slot_kind(self, slot: int) -> str:
+        """Mixer kind for layer-slot `slot` within a group."""
+        if self.layer_pattern == RWKV:
+            return RWKV
+        if self.layer_pattern == "mamba_hybrid":
+            # jamba: one attention layer per `attn_every` layers, rest mamba
+            return ATTN if (slot % self.attn_every == self.attn_every - 1) else MAMBA
+        return ATTN
+
+    def slot_has_cross(self, slot: int) -> bool:
+        if not self.cross_attn_every:
+            return False
+        return slot % self.cross_attn_every == self.cross_attn_every - 1
+
+    def slot_is_moe(self, slot: int) -> bool:
+        if not self.moe:
+            return False
+        return slot % self.moe_every == self.moe_every - 1
+
+    def slot_attn_kind(self, slot: int) -> str:
+        if self.full_attn_every:
+            return FULL if (slot % self.full_attn_every == self.full_attn_every - 1) else self.attn_kind
+        return self.attn_kind
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch hold a 500k context (long_500k eligibility)?"""
+        if self.layer_pattern in (RWKV, "mamba_hybrid"):
+            return True  # O(1)/chunked state; hybrid attn layers are seq-sharded
+        return self.attn_kind in (SLIDING, CHUNKED)
+
+    def param_count(self) -> int:
+        """Approximate global parameter count (unpadded)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim_
+        n_q = self.num_heads * hd
+        n_kv = self.num_kv_heads * hd
+        total = 2 * V * d  # embed + lm head
+        for slot in [g for g in range(self.group_size)]:
+            kind = self.slot_kind(slot)
+            if kind == ATTN:
+                mix = d * n_q + 2 * d * n_kv + n_q * d
+            elif kind == RWKV:
+                mix = 6 * d * d  # r,k,v,g,w(+lora),o approx
+            else:  # mamba
+                di = self.mamba_expand * d
+                mix = 2 * d * di + di * d + di * (2 * self.mamba_d_state + self.dt_rank)
+            if self.slot_has_cross(slot):
+                mix += d * n_q + 2 * d * n_kv + n_q * d
+            if self.slot_is_moe(slot):
+                ffp = self.num_experts * 3 * d * ff
+                if self.shared_expert:
+                    ffp += 3 * d * ff
+            else:
+                ffp = 3 * d * ff
+            total += (mix + ffp) * self.num_groups
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_like = self.param_count()
+        for slot in range(self.group_size):
+            if self.slot_is_moe(slot):
+                unused = (self.num_experts - self.top_k) * 3 * d * ff
+                dense_like -= unused * self.num_groups
+        return dense_like

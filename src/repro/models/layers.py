@@ -1,0 +1,226 @@
+"""Tensor-parallel primitive layers (manual collectives).
+
+All model code executes *inside* ``jax.shard_map`` with the mesh axes
+manual, so tensor parallelism is written explicitly:
+
+  * column-parallel matmul: weight sharded on its output dim over the
+    ``model`` axis; no collective (activations replicated in).
+  * row-parallel matmul: weight sharded on its input dim; partial outputs
+    summed with ``psum(axis='model')``.
+  * vocab-parallel embedding / LM head with psum-combined lookup and a
+    distributed (max/logsumexp) softmax cross-entropy.
+
+Head / ffn / vocab dims are zero-padded up to multiples of the TP degree
+(``Dims``); padding columns are initialized to zero and contribute
+nothing (their gradients stay zero under SGD, and the LM-head padding is
+masked to -inf in the softmax).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def pad_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+class TPCtx(NamedTuple):
+    """Static sharding context threaded through model code."""
+
+    model_axis: str = "model"
+    data_axes: tuple = ("data",)
+    tp: int = 1
+    dp: int = 1
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    def psum_tp(self, x):
+        # named so remat policies can pin collective outputs as residuals
+        # (remat="dots_psum"): replaying a psum in the backward costs real
+        # ICI bandwidth, unlike replaying elementwise compute.
+        from jax.ad_checkpoint import checkpoint_name
+        return checkpoint_name(
+            jax.lax.psum(x, self.model_axis), "tp_psum")
+
+    def tp_rank(self):
+        return jax.lax.axis_index(self.model_axis)
+
+
+class Dims(NamedTuple):
+    """TP-padded local dimensions for one config.
+
+    Query heads are zero-pad-sharded over the model axis; the (small,
+    GQA) kv projection is *replicated* across it — this keeps every q
+    head's kv head device-local for any (heads, kv, tp) combination, at
+    the cost of replicating the cheap kv-proj FLOPs.  Decode KV caches
+    are sharded over the model axis along the *sequence* dim instead
+    (attention.py combines partial softmax stats with pmax/psum).
+    """
+
+    n_heads: int          # padded global query heads
+    n_kv_heads: int       # kv heads (replicated; unpadded)
+    heads_local: int
+    d_ff: int             # padded global
+    ff_local: int
+    vocab: int            # padded global
+    vocab_local: int
+    head_dim: int
+    tp: int
+
+    @property
+    def heads_unpadded_ratio(self) -> float:
+        return 1.0
+
+
+def make_dims(cfg: ModelConfig, tp: int) -> Dims:
+    hd = cfg.head_dim_
+    n_heads = pad_to(cfg.num_heads, tp)
+    d_ff = pad_to(cfg.d_ff, tp)
+    vocab = pad_to(cfg.vocab_size, tp)
+    return Dims(
+        n_heads=n_heads,
+        n_kv_heads=cfg.num_kv_heads,
+        heads_local=n_heads // tp,
+        d_ff=d_ff,
+        ff_local=d_ff // tp,
+        vocab=vocab,
+        vocab_local=vocab // tp,
+        head_dim=hd,
+        tp=tp,
+    )
+
+
+def head_mask(ctx: "TPCtx", cfg: ModelConfig, dims: Dims):
+    """1.0 for real q heads, 0.0 for TP padding heads (keeps padded
+    weights at zero gradient so they never contaminate the output)."""
+    g = ctx.tp_rank() * dims.heads_local + jnp.arange(dims.heads_local)
+    return (g < cfg.num_heads).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# initializers — all take the *local* shape; padding handled by callers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_dim, dtype):
+    scale = in_dim ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_lookup(ctx: TPCtx, emb_local, ids):
+    """emb_local: (vocab_local, d); ids: (B, S) global ids."""
+    vloc = emb_local.shape[0]
+    start = ctx.tp_rank() * vloc
+    local = ids - start
+    inside = (local >= 0) & (local < vloc)
+    safe = jnp.clip(local, 0, vloc - 1)
+    x = jnp.take(emb_local, safe, axis=0)
+    x = jnp.where(inside[..., None], x, 0.0)
+    return ctx.psum_tp(x.astype(ctx.compute_dtype))
+
+
+def _ce_chunk(ctx: TPCtx, w_local, x, labels, vocab_unpadded: int):
+    """CE loss-sum for one (B, chunk, d) slice; vocab-sharded softmax."""
+    vloc = w_local.shape[-1]
+    start = ctx.tp_rank() * vloc
+    logits = (x @ w_local).astype(jnp.float32)  # (B,C,vloc)
+    col = start + jnp.arange(vloc)
+    logits = jnp.where(col[None, None, :] < vocab_unpadded, logits, -jnp.inf)
+
+    m_local = jnp.max(logits, axis=-1)
+    # pmax has no AD rule; all_gather+max is differentiable (and the max
+    # is a constant shift anyway, so stop_gradient keeps the exact grad).
+    m_all = jax.lax.all_gather(jax.lax.stop_gradient(m_local),
+                               ctx.model_axis)
+    m = jnp.max(m_all, axis=0)
+    se = ctx.psum_tp(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    lse = m + jnp.log(se)
+
+    local_label = labels - start
+    inside = (local_label >= 0) & (local_label < vloc)
+    safe = jnp.clip(local_label, 0, vloc - 1)
+    picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    correct = ctx.psum_tp(jnp.where(inside, picked, 0.0))
+    return jnp.sum(lse - correct)
+
+
+def lm_head_loss(ctx: TPCtx, w_local, x, labels, vocab_unpadded: int,
+                 chunk: int = 512):
+    """Distributed softmax cross-entropy over a vocab-sharded LM head.
+
+    Computed over sequence chunks (rematerialized) so the f32 logits temp
+    is (B, chunk, vocab_local) rather than the full sequence.
+    w_local: (d, vocab_local); x: (B, S, d); labels: (B, S).
+    Returns mean CE loss over all positions.
+    """
+    B, S, d = x.shape
+    if S <= chunk or S % chunk:
+        return _ce_chunk(ctx, w_local, x, labels, vocab_unpadded) / (B * S)
+
+    nc = S // chunk
+
+    def body(acc, inp):
+        xc, lc = inp
+        return acc + _ce_chunk(ctx, w_local, xc, lc, vocab_unpadded), None
+
+    body = jax.checkpoint(body)
+    xs = (x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, nc, chunk).transpose(1, 0, 2))
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return total / (B * S)
+
+
+def ffn_param_specs(cfg: ModelConfig, dims: Dims):
+    d = cfg.d_model
+    return {
+        "w1": ((d, dims.ff_local), d),
+        "w3": ((d, dims.ff_local), d),
+        "w2": ((dims.ff_local, d), dims.d_ff),
+    }
+
+
+def ffn_forward(ctx: TPCtx, p, x):
+    """SwiGLU FFN, column->row parallel with one psum."""
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return ctx.psum_tp(h @ p["w2"])
+
+
+def lm_head_logits(ctx: TPCtx, w_local, x, vocab_unpadded: int):
+    """Full (all-gathered) logits for serving; x: (B, d) last-position."""
+    logits = (x @ w_local).astype(jnp.float32)
+    full = jax.lax.all_gather(
+        logits, ctx.model_axis, axis=logits.ndim - 1, tiled=True
+    )
+    return full[..., :vocab_unpadded]

@@ -1,0 +1,125 @@
+"""Mamba selective-SSM layer (Jamba's sequence mixer).
+
+Diagonal selective state space:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+TPU adaptation: the diagonal recurrence is associative, so each chunk of
+64 steps runs as a ``jax.lax.associative_scan`` (log-depth, vectorized
+over channels/state) while an outer ``lax.scan`` carries the (d_inner,
+d_state) state across chunks — bounding the unrolled working set to one
+chunk.  The channel dimension (d_inner = expand * d_model) is sharded
+over the ``model`` axis; out_proj is row-parallel (psum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Dims, TPCtx, dense_init
+
+MAMBA_CHUNK = 64
+
+
+def mamba_dims(cfg: ModelConfig, tp: int):
+    di = cfg.mamba_expand * cfg.d_model
+    assert di % tp == 0, (cfg.name, di, tp)
+    return di, di // tp
+
+
+def mamba_param_specs(cfg: ModelConfig, dims: Dims, tp: int):
+    d = cfg.d_model
+    di, dil = mamba_dims(cfg, tp)
+    st, rk, cw = cfg.mamba_d_state, cfg.dt_rank, cfg.mamba_conv
+    return {
+        "in_proj": ((d, 2 * dil), d),
+        "conv_w": ((cw, dil), 0),
+        "conv_b": ((dil,), 0),
+        "x_proj": ((dil, rk + 2 * st), dil),
+        "dt_proj": ((rk, dil), rk),
+        "dt_bias": ((dil,), 0),
+        "A_log": ((dil, st), -2),   # special init
+        "D": ((dil,), -1),
+        "out_proj": ((dil, d), di),
+    }
+
+
+def _causal_conv(x, w, b, width: int, conv_state=None):
+    """Depthwise causal conv along S. x: (B,S,dil); w: (width, dil)."""
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jnp.zeros_like(x) + b
+    for j in range(width):
+        y = y + w[j] * jax.lax.dynamic_slice_in_dim(
+            xp, j, x.shape[1], axis=1)
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return y, new_state
+
+
+def _ssm_scan(decay, drive, h0, chunk: int):
+    """h_t = decay_t * h_{t-1} + drive_t, both (B,S,dil,st); h0 (B,dil,st)."""
+    B, S, dil, st = decay.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+
+    def chunk_step(h, inp):
+        dc, dr = inp  # (B,L,dil,st)
+
+        def combine(a, b):
+            return (a[0] * b[0], a[1] * b[0] + b[1])
+
+        cd, ch = jax.lax.associative_scan(combine, (dc, dr), axis=1)
+        hs = cd * h[:, None] + ch           # states for every step
+        return hs[:, -1], hs
+
+    def split(t):
+        return t.reshape(B, nc, L, dil, st).transpose(1, 0, 2, 3, 4)
+
+    h_last, hs = jax.lax.scan(chunk_step, h0, (split(decay), split(drive)))
+    return h_last, hs.transpose(1, 0, 2, 3, 4).reshape(B, S, dil, st)
+
+
+def mamba_forward(ctx: TPCtx, cfg: ModelConfig, dims: Dims, p, x, *,
+                  cache=None, return_state=False, chunk: int = MAMBA_CHUNK):
+    """x: (B,S,d). cache = (h (B,dil,st), conv_state (B,width-1,dil))."""
+    B, S, d = x.shape
+    di, dil = mamba_dims(cfg, ctx.tp)
+    st, rk, cw = cfg.mamba_d_state, cfg.dt_rank, cfg.mamba_conv
+
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)          # (B,S,dil) each
+    conv_state = cache[1] if cache is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], cw, conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+
+    proj = xc @ p["x_proj"].astype(jnp.float32)
+    dt_raw, Bs, Cs = jnp.split(proj, [rk, rk + st], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,dil)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (dil,st)
+
+    decay = jnp.exp(dt[..., None] * A)                          # (B,S,dil,st)
+    drive = (dt * xc)[..., None] * Bs[:, :, None, :]
+
+    h0 = cache[0] if cache is not None else jnp.zeros((B, dil, st), jnp.float32)
+    h_last, hs = _ssm_scan(decay, drive, h0, chunk)
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cs)
+    y = y + p["D"].astype(jnp.float32) * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = ctx.psum_tp(y.astype(x.dtype) @ p["out_proj"])
+    if return_state:
+        return out, (h_last, new_conv)
+    return out, None
+
+
+def mamba_decode(ctx: TPCtx, cfg: ModelConfig, dims: Dims, p, x, cache):
+    """Single-token step; x: (B,1,d)."""
+    out, new_cache = mamba_forward(
+        ctx, cfg, dims, p, x, cache=cache, return_state=True, chunk=1)
+    return out, new_cache

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with capacity-based routing and expert+tensor
+parallelism over the ``model`` mesh axis.
+
+The TP degree is factored as tp = ep * fp with ep = gcd(num_experts, tp):
+device r owns expert block r // fp and ffn shard r % fp.  Tokens stay
+resident (they are replicated across the model axis between blocks), each
+device computes its local experts' contribution at capacity, and a single
+``psum('model')`` combines both the expert dimension and the row-parallel
+ffn partial sums — the same collective the dense row-parallel FFN needs,
+so MoE adds *no* extra collectives beyond the router's negligible cost.
+Dropped-beyond-capacity tokens fall through with zero contribution
+(standard GShard/Switch semantics; capacity_factor controls the drop
+rate).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Dims, TPCtx, dense_init
+
+
+def moe_factor(cfg: ModelConfig, tp: int) -> tuple[int, int]:
+    ep = math.gcd(cfg.num_experts, tp)
+    return ep, tp // ep
+
+
+def moe_param_specs(cfg: ModelConfig, dims: Dims, tp: int):
+    d = cfg.d_model
+    ep, fp = moe_factor(cfg, tp)
+    e_local = cfg.num_experts // ep
+    ff_local = -(-cfg.d_ff // fp)
+    specs = {
+        "router": ((d, cfg.num_experts), d),
+        "w1": ((e_local, d, ff_local), d),
+        "w3": ((e_local, d, ff_local), d),
+        "w2": ((e_local, ff_local, d), cfg.d_ff),
+    }
+    if cfg.shared_expert:
+        specs["sw1"] = ((d, dims.ff_local), d)
+        specs["sw3"] = ((d, dims.ff_local), d)
+        specs["sw2"] = ((dims.ff_local, d), cfg.d_ff)
+    return specs
+
+
+def init_moe_params(key, specs, dtype):
+    out = {}
+    for i, (name, (shape, in_dim)) in enumerate(sorted(specs.items())):
+        out[name] = dense_init(jax.random.fold_in(key, i), shape, in_dim, dtype)
+    return out
+
+
+def capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(math.ceil(num_tokens * cfg.top_k / cfg.num_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(ctx: TPCtx, cfg: ModelConfig, p, x):
+    """x: (B, S, d) replicated over model axis -> (B, S, d), aux loss."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, k = cfg.num_experts, cfg.top_k
+    ep, fp = moe_factor(cfg, tp=ctx.tp)
+    e_local = E // ep
+    C = capacity(cfg, T)
+
+    # ---- routing (replicated compute; router weights replicated) --------
+    logits = (xt @ p["router"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                # (T, k)
+    if k > 1:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert.reshape(-1)].add(
+        1.0 / (T * k), mode="promise_in_bounds")
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    # ---- dispatch: position of each (token, slot) within its expert -----
+    flat_e = expert.reshape(-1)                           # (T*k,) token-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (T*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot       # rank within expert
+    pos = jnp.sum(pos, axis=-1)                           # (T*k,)
+    keep = pos < C
+
+    my_block = ctx.tp_rank() // fp                        # expert block id
+    e_lo = my_block * e_local
+    mine = (flat_e >= e_lo) & (flat_e < e_lo + e_local) & keep
+    e_loc = jnp.clip(flat_e - e_lo, 0, e_local - 1)
+    tok = jnp.arange(T * k) // k
+
+    expert_in = jnp.zeros((e_local, C, d), x.dtype)
+    expert_in = expert_in.at[
+        jnp.where(mine, e_loc, 0), jnp.where(mine, pos, 0)
+    ].add(jnp.where(mine[:, None], xt[tok], 0))
+
+    # ---- expert computation (ffn shard fp-way row/col parallel) ----------
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["w3"])
+    h = jax.nn.silu(h) * g
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w2"])   # partial over fp
+
+    # ---- combine: gather back, weight by gate, psum over model -----------
+    contrib = expert_out[
+        jnp.where(mine, e_loc, 0), jnp.where(mine, pos, 0)
+    ]                                                      # (T*k, d)
+    contrib = jnp.where(mine[:, None], contrib, 0)
+    gflat = gate.reshape(-1).astype(contrib.dtype)
+    y = jnp.zeros((T, d), contrib.dtype).at[tok].add(contrib * gflat[:, None])
+    # replicated expert blocks (fp > 1) each add their ffn partial sums;
+    # expert blocks are disjoint -> one psum merges everything.
+    if cfg.shared_expert:
+        sh = jax.nn.silu(xt @ p["sw1"]) * (xt @ p["sw3"])
+        y = y + sh @ p["sw2"]
+    y = ctx.psum_tp(y)
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,176 @@
+"""RWKV6 ("Finch") time-mix layer — attention-free, data-dependent decay.
+
+Recurrence per head (state S in R^{hd x hd}):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          w_t = exp(-exp(.)) in (0,1)
+    o_t = r_t S_{t-1} + (r_t . (u ⊙ k_t)) v_t    (u = per-channel bonus)
+
+TPU adaptation: the sequential recurrence is rewritten as *chunked linear
+attention* — within a chunk of length L the contribution of step i<t is
+an exact masked matmul weighted by exp(cw_{t-1} - cw_i) (cw = cumulative
+log-decay, so every exponent is <= 0: numerically safe without clamping);
+across chunks a ``lax.scan`` carries the (hd x hd) state.  This turns the
+recurrence into MXU-shaped einsums with an O(L^2 · hd) working set per
+chunk instead of an O(S) serial chain.
+
+Heads are sharded over the ``model`` axis; the output projection is
+row-parallel (psum).  The decay is data-dependent through a LoRA on the
+token-shifted input (the defining RWKV6 feature); r/k/v/g use learned
+static token-shift interpolation (the dynamic ddlerp is applied to the
+decay path, where the paper's adaptivity lives — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Dims, TPCtx, dense_init
+
+LORA_DIM = 64
+RWKV_CHUNK = 32
+
+
+def rwkv_dims(cfg: ModelConfig, tp: int):
+    hd = cfg.rwkv_head_dim
+    n_heads = cfg.d_model // hd
+    assert n_heads % tp == 0, (cfg.name, n_heads, tp)
+    return n_heads, n_heads // tp, hd
+
+
+def rwkv_param_specs(cfg: ModelConfig, dims: Dims, tp: int):
+    d = cfg.d_model
+    _, h_local, hd = rwkv_dims(cfg, tp)
+    dl = h_local * hd
+    return {
+        "mu_r": ((d,), 0), "mu_k": ((d,), 0), "mu_v": ((d,), 0),
+        "mu_g": ((d,), 0), "mu_w": ((d,), 0),
+        "w0": ((d,), 0),
+        "w_lora_a": ((d, LORA_DIM), d),
+        "w_lora_b": ((LORA_DIM, d), LORA_DIM),
+        "proj_r": ((d, dl), d), "proj_k": ((d, dl), d), "proj_v": ((d, dl), d),
+        "proj_g": ((d, dl), d),
+        "u": ((dl,), 0),
+        "ln_x": ((dl,), -1),
+        "wo": ((dl, d), d),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,1,d) last token of the previous segment."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _decay_log(ctx, p, xw, h_local, hd):
+    """Data-dependent per-channel log decay, in (-inf, 0), sliced to this
+    device's head block (the LoRA targets all d channels)."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    full = -jnp.exp(
+        jnp.clip((p["w0"] + lora).astype(jnp.float32), -8.0, 8.0)
+    )  # <= 0 always
+    dl = h_local * hd
+    start = ctx.tp_rank() * dl
+    return jax.lax.dynamic_slice_in_dim(full, start, dl, axis=-1)
+
+
+def _group_rms(x, weight, eps):
+    """Per-head RMS norm on (B,S,H,hd)-flattened channels."""
+    B, S, H, hd = x.shape
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, H * hd) * weight).astype(x.dtype)
+
+
+def rwkv_forward(ctx: TPCtx, cfg: ModelConfig, dims: Dims, p, x, *,
+                 prev_token=None, state=None, return_state=False,
+                 chunk: int = RWKV_CHUNK):
+    """x: (B,S,d) -> (B,S,d). state: (B,Hl,hd,hd); prev_token: (B,1,d)."""
+    B, S, d = x.shape
+    _, Hl, hd = rwkv_dims(cfg, ctx.tp)
+    if prev_token is None:
+        prev_token = jnp.zeros((B, 1, d), x.dtype)
+    xs = _token_shift(x, prev_token)
+
+    r = (_mix(x, xs, p["mu_r"]) @ p["proj_r"]).reshape(B, S, Hl, hd)
+    k = (_mix(x, xs, p["mu_k"]) @ p["proj_k"]).reshape(B, S, Hl, hd)
+    v = (_mix(x, xs, p["mu_v"]) @ p["proj_v"]).reshape(B, S, Hl, hd)
+    g = _mix(x, xs, p["mu_g"]) @ p["proj_g"]
+    logw = _decay_log(ctx, p, _mix(x, xs, p["mu_w"]), Hl, hd).reshape(
+        B, S, Hl, hd)
+    u = p["u"].reshape(Hl, hd).astype(jnp.float32)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+
+    if state is None:
+        state = jnp.zeros((B, Hl, hd, hd), jnp.float32)
+
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    def chunk_step(S0, inp):
+        rc, kc, vc, wc = inp  # (B,L,Hl,hd) each
+        cw = jnp.cumsum(wc, axis=1)            # inclusive cumulative log-decay
+        cw_prev = cw - wc                       # exclusive (cw_{t-1})
+        # cross-chunk: o_t += (r_t ⊙ e^{cw_{t-1}}) S0
+        rd = rc * jnp.exp(cw_prev)
+        cross = jnp.einsum("blhd,bhde->blhe", rd, S0)
+        # intra-chunk (i < t), exponents cw_prev[t] - cw[i] <= 0 for i <= t-1
+        diff = cw_prev[:, :, None] - cw[:, None]          # (B,L,L,Hl,hd)
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        D = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        P = jnp.einsum("bthd,bihd,btihd->btih", rc, kc, D)
+        intra = jnp.einsum("btih,bihe->bthe", P, vc)
+        # bonus (current token): (r_t . (u ⊙ k_t)) v_t
+        bonus = jnp.einsum("bthd,hd,bthd->bth", rc, u, kc)[..., None] * vc
+        # state to end of chunk
+        kd = kc * jnp.exp(cw[:, -1:] - cw)
+        S1 = jnp.exp(cw[:, -1])[..., None] * S0 + jnp.einsum(
+            "bihd,bihe->bhde", kd, vc)
+        return S1, cross + intra + bonus
+
+    def split(t):
+        return t.reshape(B, nc, L, Hl, hd).transpose(1, 0, 2, 3, 4)
+
+    state, out = jax.lax.scan(
+        chunk_step, state, (split(r32), split(k32), split(v32), split(logw))
+    )
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, Hl, hd)
+
+    out = _group_rms(out, p["ln_x"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(out.dtype)
+    y = ctx.psum_tp(out @ p["wo"])
+    if return_state:
+        return y, (state, x[:, -1:])
+    return y, None
+
+
+def rwkv_decode(ctx: TPCtx, cfg: ModelConfig, dims: Dims, p, x, cache):
+    """Single-token step; x: (B,1,d); cache = (state (B,Hl,hd,hd),
+    prev_x (B,1,d)).  Returns (y (B,1,d), new cache)."""
+    B = x.shape[0]
+    _, Hl, hd = rwkv_dims(cfg, ctx.tp)
+    state, prev_x = cache
+    xf, xs = x[:, 0], prev_x[:, 0]
+    r = (_mix(xf, xs, p["mu_r"]) @ p["proj_r"]).reshape(B, Hl, hd)
+    k = (_mix(xf, xs, p["mu_k"]) @ p["proj_k"]).reshape(B, Hl, hd)
+    v = (_mix(xf, xs, p["mu_v"]) @ p["proj_v"]).reshape(B, Hl, hd)
+    g = _mix(xf, xs, p["mu_g"]) @ p["proj_g"]
+    logw = _decay_log(ctx, p, _mix(xf, xs, p["mu_w"]), Hl, hd).reshape(
+        B, Hl, hd)
+    u = p["u"].reshape(Hl, hd).astype(jnp.float32)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    o = jnp.einsum("bhd,bhde->bhe", r32, state)
+    o = o + jnp.einsum("bhd,hd,bhd->bh", r32, u, k32)[..., None] * v32
+    state = jnp.exp(logw)[..., None] * state + jnp.einsum(
+        "bhd,bhe->bhde", k32, v32)
+
+    o = _group_rms(o[:, None], p["ln_x"], cfg.norm_eps)        # (B,1,dl)
+    o = o * jax.nn.silu(g.astype(jnp.float32))[:, None].astype(o.dtype)
+    y = ctx.psum_tp(o @ p["wo"])
+    return y, (state, x)

@@ -1,0 +1,596 @@
+"""Composable decoder stack covering all assigned architecture families.
+
+Parameter layout (the repo-wide convention):
+  * every TP-sharded leaf is stored with a leading mesh axis:
+      slot (per-layer) leaves: (n_groups, tp, *local_shape)  P(None,'model')
+      global leaves (embed, lm_head): (tp, *local_shape)     P('model')
+      tiny replicated leaves (final_norm): local shape       P()
+  * inside ``shard_map`` the tp axis arrives with extent 1 and is squeezed.
+
+The layer stack is executed as ``lax.scan`` over ``n_groups`` repetitions
+of a ``group_size``-slot pattern (config.py), keeping HLO size O(group).
+All collectives are explicit: psum('model') row-parallel combines,
+vocab-parallel embedding / CE loss, sequence-sharded decode caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import fsdp as fsdp_lib
+from . import attention, mamba, moe, rwkv
+from .config import ATTN, CROSS, FULL, MAMBA, RWKV, ModelConfig
+from .layers import (
+    Dims,
+    TPCtx,
+    dense_init,
+    embed_lookup,
+    ffn_forward,
+    ffn_param_specs,
+    lm_head_logits,
+    lm_head_loss,
+    make_dims,
+    rms_norm,
+)
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# parameter specs / init
+# ---------------------------------------------------------------------------
+
+def _init_leaf(key, shape, code, dtype, cfg: ModelConfig):
+    if code == -1:
+        return jnp.ones(shape, dtype)
+    if code == -2:  # mamba A_log: log(1..d_state) per channel
+        st = shape[-1]
+        a = jnp.broadcast_to(jnp.log(jnp.arange(1, st + 1, dtype=jnp.float32)),
+                             shape)
+        return a.astype(dtype)
+    if code == -4:  # token-shift mixing factors
+        return jnp.full(shape, 0.5, dtype)
+    if code == 0:
+        return jnp.zeros(shape, dtype)
+    return dense_init(key, shape, code, dtype)
+
+
+# Leaves that are REPLICATED across the model axis must be initialized
+# rank-invariantly: the kv projections (the decode cache is read across
+# sequence shards on other ranks) and the MoE router (all ranks must
+# route identically for the expert-psum combine to be coherent).
+REPLICATED_LEAVES = {"wk", "wv", "bk", "bv", "router", "w_lora_a",
+                     "w_lora_b", "w0", "mu_r", "mu_k", "mu_v", "mu_g",
+                     "mu_w"}
+
+
+def _init_tree(key, specs, dtype, cfg, rank=None):
+    out = {}
+    names = sorted(specs.keys())
+    for i, name in enumerate(names):
+        sub = specs[name]
+        k = jax.random.fold_in(key, i)
+        if isinstance(sub, dict):
+            out[name] = _init_tree(k, sub, dtype, cfg, rank)
+        else:
+            if rank is not None and name not in REPLICATED_LEAVES:
+                k = jax.random.fold_in(k, rank + 1)
+            shape, code = sub
+            out[name] = _init_leaf(k, shape, code, dtype, cfg)
+    return out
+
+
+def slot_param_specs(cfg: ModelConfig, dims: Dims, tp: int, slot: int):
+    d = cfg.d_model
+    kind = cfg.slot_kind(slot)
+    specs: dict[str, Any] = {
+        "norm1": ((d,), -1),
+        "norm2": ((d,), -1),
+    }
+    if kind == ATTN:
+        specs["mixer"] = attention.attn_param_specs(cfg, dims)
+    elif kind == RWKV:
+        specs["mixer"] = rwkv.rwkv_param_specs(cfg, dims, tp)
+    elif kind == MAMBA:
+        specs["mixer"] = mamba.mamba_param_specs(cfg, dims, tp)
+    else:
+        raise ValueError(kind)
+    if cfg.slot_has_cross(slot):
+        specs["cross_norm"] = ((d,), -1)
+        specs["cross"] = attention.attn_param_specs(cfg, dims, cross=True)
+    if cfg.slot_is_moe(slot):
+        specs["ffn"] = moe.moe_param_specs(cfg, dims, tp)
+    else:
+        specs["ffn"] = ffn_param_specs(cfg, dims)
+    return specs
+
+
+class Model:
+    """One architecture on one mesh. All apply-methods assume they run
+    inside shard_map with manual axes (ctx.model_axis + ctx.data_axes)."""
+
+    def __init__(self, cfg: ModelConfig, *, tp: int, dp: int = 1,
+                 model_axis: str = "model", data_axes: tuple = ("data",),
+                 seq_shard_axes: tuple | None = None,
+                 remat: str = "full", param_mode: str = "dp",
+                 fsdp_scheme=None, fsdp_sync: str = "quantized"):
+        """remat: 'full' (recompute each layer group in bwd — O(1-layer)
+        activation memory), 'dots' (save matmul outputs), or 'none'.
+
+        param_mode: 'dp' (params replicated over the data axes — the
+        paper's Algorithm-1 setting) or 'fsdp' (params stored flat and
+        sharded over the data axes, gathered per layer group; gradients
+        aggregate inside the gather's custom_vjp — quantized when
+        fsdp_sync='quantized' with `fsdp_scheme`, else fp32
+        psum_scatter).  Big-arch configs need fsdp to fit HBM."""
+        self.cfg = cfg
+        self.tp = tp
+        self.dp = dp
+        self.dims = make_dims(cfg, tp)
+        self.ctx = TPCtx(
+            model_axis=model_axis,
+            data_axes=data_axes,
+            tp=tp,
+            dp=dp,
+            compute_dtype=jnp.dtype(cfg.compute_dtype),
+        )
+        # axes over which decode caches are sequence-sharded
+        self.seq_shard_axes = seq_shard_axes or (model_axis,)
+        self.remat = remat
+        self._max_len = 0
+
+        # ---- FSDP layout metadata ----
+        self.param_mode = param_mode
+        if param_mode == "fsdp":
+            from repro.core.schemes import QuantScheme
+            scheme = fsdp_scheme or QuantScheme(name="fp32")
+            self._fsdp_scheme = scheme
+            self._gather = fsdp_lib.make_gather(
+                data_axes, scheme, fsdp_sync)
+            self._slot_meta = []
+            self._slot_len = []
+            world = dp
+            for s in range(cfg.group_size):
+                meta = fsdp_lib.flatten_meta(
+                    slot_param_specs(cfg, self.dims, tp, s))
+                self._slot_meta.append(meta)
+                self._slot_len.append(fsdp_lib.padded_flat_len(
+                    meta, scheme.bucket_size, world, dp))
+            d = cfg.d_model
+            self._embed_meta = [(("embed",), (self.dims.vocab_local, d), d)]
+            self._lm_meta = [(("lm_head",), (d, self.dims.vocab_local), d)]
+            self._embed_len = fsdp_lib.padded_flat_len(
+                self._embed_meta, scheme.bucket_size, world, dp)
+            self._lm_len = fsdp_lib.padded_flat_len(
+                self._lm_meta, scheme.bucket_size, world, dp)
+            self._dummy_ctx = (scheme.init_state().levels,
+                               jax.random.PRNGKey(0))
+
+    # ---- params ---------------------------------------------------------
+
+    def init(self, key) -> dict:
+        """Global params (leading mesh axes materialized by vmapping the
+        per-(group, rank) local init)."""
+        if self.param_mode == "fsdp":
+            return self._init_fsdp(key)
+        cfg, dims, tp = self.cfg, self.dims, self.tp
+        pdt = jnp.dtype(cfg.param_dtype)
+        d = cfg.d_model
+
+        def global_leaf(k, shape, code):
+            def per_rank(r):
+                return _init_leaf(jax.random.fold_in(k, r), shape, code, pdt,
+                                  cfg)
+            return jax.vmap(per_rank)(jnp.arange(tp))
+
+        params = {
+            "embed": global_leaf(jax.random.fold_in(key, 0),
+                                 (dims.vocab_local, d), d),
+            "lm_head": global_leaf(jax.random.fold_in(key, 1),
+                                   (d, dims.vocab_local), d),
+            "final_norm": jnp.ones((d,), pdt),
+        }
+
+        slots = []
+        for slot in range(cfg.group_size):
+            specs = slot_param_specs(cfg, dims, tp, slot)
+
+            def init_one(g, r, slot=slot, specs=specs):
+                k = jax.random.fold_in(
+                    jax.random.fold_in(key, 100 + slot), g)
+                return _init_tree(k, specs, pdt, cfg, rank=r)
+
+            stacked = jax.vmap(
+                lambda g: jax.vmap(lambda r: init_one(g, r))(jnp.arange(tp))
+            )(jnp.arange(cfg.num_groups))
+            slots.append(stacked)
+        params["slots"] = slots
+        return params
+
+    def _init_fsdp(self, key) -> dict:
+        """Flat FSDP layout: each slot (n_groups, tp, Lp); Lp sharded over
+        the data axes at rest."""
+        cfg, tp = self.cfg, self.tp
+        pdt = jnp.dtype(cfg.param_dtype)
+
+        def flat_of(tree, meta, Lp):
+            leaves = []
+            node_lookup = tree
+            for path, shape, _ in meta:
+                node = node_lookup
+                for p in path:
+                    node = node[p]
+                leaves.append(node.reshape(-1))
+            flat = jnp.concatenate(leaves)
+            return jnp.pad(flat, (0, Lp - flat.shape[0]))
+
+        params = {"final_norm": jnp.ones((cfg.d_model,), pdt)}
+
+        def embed_leaf(k, meta, Lp):
+            def per_rank(r):
+                path, shape, code = meta[0]
+                leaf = _init_leaf(jax.random.fold_in(k, r), shape, code,
+                                  pdt, cfg)
+                return jnp.pad(leaf.reshape(-1), (0, Lp - leaf.size))
+            return jax.vmap(per_rank)(jnp.arange(tp))
+
+        params["embed"] = embed_leaf(jax.random.fold_in(key, 0),
+                                     self._embed_meta, self._embed_len)
+        params["lm_head"] = embed_leaf(jax.random.fold_in(key, 1),
+                                       self._lm_meta, self._lm_len)
+
+        slots = []
+        for slot in range(cfg.group_size):
+            specs = slot_param_specs(cfg, self.dims, tp, slot)
+            meta = self._slot_meta[slot]
+            Lp = self._slot_len[slot]
+
+            def init_one(g, r, specs=specs, meta=meta, Lp=Lp, slot=slot):
+                k = jax.random.fold_in(
+                    jax.random.fold_in(key, 100 + slot), g)
+                return flat_of(_init_tree(k, specs, pdt, cfg, rank=r),
+                               meta, Lp)
+
+            stacked = jax.vmap(
+                lambda g: jax.vmap(lambda r: init_one(g, r))(jnp.arange(tp))
+            )(jnp.arange(cfg.num_groups))
+            slots.append(stacked)
+        params["slots"] = slots
+        return params
+
+    def param_struct(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def param_specs(self):
+        """PartitionSpec pytree matching init()'s output."""
+        struct = self.param_struct()
+        if self.param_mode == "fsdp":
+            da = tuple(self.ctx.data_axes)
+            return {
+                "embed": P("model", da),
+                "lm_head": P("model", da),
+                "final_norm": P(),
+                "slots": [P(None, "model", da) for _ in struct["slots"]],
+            }
+        return {
+            "embed": P("model"),
+            "lm_head": P("model"),
+            "final_norm": P(),
+            "slots": jax.tree.map(lambda _: P(None, "model"),
+                                  struct["slots"]),
+        }
+
+    # ---- one layer slot ---------------------------------------------------
+
+    def _apply_slot(self, slot, p, x, positions, vision, mode, cache,
+                    pos, cache_shards):
+        cfg, dims, ctx = self.cfg, self.dims, self.ctx
+        kind = cfg.slot_kind(slot)
+        akind = cfg.slot_attn_kind(slot)
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        new_cache = cache
+        if kind == ATTN:
+            if mode == "decode":
+                mix, new_cache = attention.attn_decode(
+                    ctx, cfg, dims, p["mixer"], h, pos, cache, akind,
+                    cache_shards=cache_shards,
+                    seq_shard_axes=self.seq_shard_axes)
+            else:
+                mix, new_cache = attention.attn_forward(
+                    ctx, cfg, dims, p["mixer"], h, positions, akind,
+                    return_cache=(mode == "prefill"),
+                    max_len=self._max_len, cache_shards=cache_shards,
+                    seq_shard_axes=self.seq_shard_axes)
+        elif kind == RWKV:
+            if mode == "decode":
+                mix, new_cache = rwkv.rwkv_decode(
+                    ctx, cfg, dims, p["mixer"], h, cache)
+            else:
+                mix, new_cache = rwkv.rwkv_forward(
+                    ctx, cfg, dims, p["mixer"], h,
+                    return_state=(mode == "prefill"))
+        elif kind == MAMBA:
+            if mode == "decode":
+                mix, new_cache = mamba.mamba_decode(
+                    ctx, cfg, dims, p["mixer"], h, cache)
+            else:
+                mix, new_cache = mamba.mamba_forward(
+                    ctx, cfg, dims, p["mixer"], h,
+                    return_state=(mode == "prefill"))
+        else:
+            raise ValueError(kind)
+        x = x + mix.astype(x.dtype)
+
+        if cfg.slot_has_cross(slot) and vision is not None:
+            hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+            x = x + attention.cross_attn_forward(
+                ctx, cfg, dims, p["cross"], hc, vision).astype(x.dtype)
+
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.slot_is_moe(slot):
+            y, aux = moe.moe_ffn(ctx, cfg, p["ffn"], h2)
+        else:
+            y, aux = ffn_forward(ctx, p["ffn"], h2), 0.0
+        return x + y.astype(x.dtype), new_cache, aux
+
+    # ---- stacks -----------------------------------------------------------
+
+    @staticmethod
+    def _squeeze_tp(tree):
+        return jax.tree.map(lambda a: a.squeeze(0), tree)
+
+    def _cast_compute(self, tree):
+        """Master params (f32) -> compute dtype for the matmul path; AD
+        routes cotangents back to f32 through the cast."""
+        cd = self.ctx.compute_dtype
+
+        def cast(a):
+            return a.astype(cd) if jnp.issubdtype(a.dtype, jnp.floating) else a
+
+        return jax.tree.map(cast, tree)
+
+    def _materialize_slot(self, s, sliced, sync_ctx):
+        """Per-group param slice -> layer param dict (FSDP: gather)."""
+        if self.param_mode != "fsdp":
+            return self._cast_compute(self._squeeze_tp(sliced))
+        shard = sliced.squeeze(0)        # (Lp / dp,)
+        levels, key = sync_ctx if sync_ctx is not None else self._dummy_ctx
+        full = self._gather(shard, levels, jax.random.fold_in(key, s))
+        return fsdp_lib.unflatten(full, self._slot_meta[s],
+                                  self.ctx.compute_dtype)
+
+    def _embed_weights(self, params, sync_ctx):
+        if self.param_mode != "fsdp":
+            return self._cast_compute(params["embed"].squeeze(0))
+        levels, key = sync_ctx if sync_ctx is not None else self._dummy_ctx
+        full = self._gather(params["embed"].squeeze(0), levels,
+                            jax.random.fold_in(key, 1001))
+        (_, shape, _), = self._embed_meta
+        return full[: shape[0] * shape[1]].reshape(shape).astype(
+            self.ctx.compute_dtype)
+
+    def _lm_weights(self, params, sync_ctx):
+        if self.param_mode != "fsdp":
+            return self._cast_compute(params["lm_head"].squeeze(0))
+        levels, key = sync_ctx if sync_ctx is not None else self._dummy_ctx
+        full = self._gather(params["lm_head"].squeeze(0), levels,
+                            jax.random.fold_in(key, 1002))
+        (_, shape, _), = self._lm_meta
+        return full[: shape[0] * shape[1]].reshape(shape).astype(
+            self.ctx.compute_dtype)
+
+    def _run_stack(self, params, x, positions, vision, mode, caches, pos,
+                   cache_shards, sync_ctx=None):
+        """lax.scan over groups. caches: list per slot of stacked pytrees
+        (or None).  Returns (x, new_caches, aux)."""
+        cfg = self.cfg
+        G = cfg.group_size
+
+        nested_ckpt = (mode == "train" and self.remat == "full" and G > 1)
+
+        def body(carry, xs):
+            x, aux = carry
+            slot_ps, slot_caches = xs
+            new_slot_caches = []
+            for s in range(G):
+                def one_slot(sliced, x, s=s):
+                    p = self._materialize_slot(s, sliced, sync_ctx)
+                    c = (slot_caches[s] if slot_caches is not None
+                         else None)
+                    return self._apply_slot(
+                        s, p, x, positions, vision, mode, c, pos,
+                        cache_shards)
+
+                if nested_ckpt:
+                    # bound the group's bwd transients to one slot at a
+                    # time (jamba groups hold 8 heterogeneous slots)
+                    one_slot = jax.checkpoint(one_slot)
+                x, nc, a = one_slot(slot_ps[s], x)
+                new_slot_caches.append(nc)
+                aux = aux + a
+            ys = tuple(new_slot_caches) if mode != "train" else None
+            return (x, aux), ys
+
+        if mode == "train" and self.remat != "none":
+            if self.remat == "dots":
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.checkpoint_dots)
+            elif self.remat == "psum":
+                # full remat EXCEPT collective outputs: replaying compute
+                # is cheap, replaying psums costs ICI twice
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.save_only_these_names(
+                        "tp_psum"))
+            else:
+                body = jax.checkpoint(body)
+
+        slot_ps = tuple(params["slots"])
+        xs = (slot_ps, tuple(caches) if caches is not None else None)
+        (x, aux), new_caches = jax.lax.scan(body, (x, 0.0), xs)
+        return x, new_caches, aux
+
+    # ---- public entry points ----------------------------------------------
+
+    def forward(self, params, ids, vision=None, sync_ctx=None):
+        """Train-mode forward to final hidden states (B, S, d)."""
+        ctx, cfg = self.ctx, self.cfg
+        B, S = ids.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = embed_lookup(ctx, self._embed_weights(params, sync_ctx), ids)
+        x, _, aux = self._run_stack(params, x, positions, vision, "train",
+                                    None, None, 1, sync_ctx)
+        x = rms_norm(x, self._cast_compute(params["final_norm"]),
+                     cfg.norm_eps)
+        return x, aux
+
+    def loss(self, params, batch, sync_ctx=None):
+        """Mean CE loss (+ MoE aux). batch: ids, labels[, vision].
+
+        sync_ctx=(levels, key) routes the FSDP backward's quantized
+        reduce-scatter (ignored in DP mode)."""
+        x, aux = self.forward(params, batch["ids"], batch.get("vision"),
+                              sync_ctx)
+        ce = lm_head_loss(self.ctx, self._lm_weights(params, sync_ctx), x,
+                          batch["labels"], self.cfg.vocab_size)
+        return ce + aux / max(self.cfg.num_layers, 1)
+
+    def prefill(self, params, ids, vision=None, *, max_len: int = 0,
+                cache_shards: int = 1):
+        """Returns (last-token logits, caches list-per-slot) with caches
+        laid out exactly as decode's ring addressing expects."""
+        ctx, cfg = self.ctx, self.cfg
+        B, S = ids.shape
+        self._max_len = max_len or S
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = embed_lookup(ctx, self._embed_weights(params, None), ids)
+        caches = [None] * cfg.group_size
+        x, new_caches, _ = self._run_stack(params, x, positions, vision,
+                                           "prefill", caches, None,
+                                           cache_shards)
+        x = rms_norm(x, self._cast_compute(params["final_norm"]),
+                     cfg.norm_eps)
+        logits = lm_head_logits(ctx, self._lm_weights(params, None),
+                                x[:, -1], cfg.vocab_size)
+        return logits, list(new_caches)
+
+    def decode(self, params, token, pos, caches, vision=None,
+               cache_shards: int | None = None):
+        """One decode step. token: (B,) ids; pos: (B,) absolute positions;
+        caches: list per slot of stacked (n_groups, ...) pytrees."""
+        ctx, cfg = self.ctx, self.cfg
+        if cache_shards is None:
+            cache_shards = 1
+            for ax in self.seq_shard_axes:
+                cache_shards *= {"model": self.tp}.get(ax, self.dp)
+        B = token.shape[0]
+        x = embed_lookup(ctx, self._embed_weights(params, None),
+                         token[:, None])
+        x, new_caches, _ = self._run_stack(
+            params, x, pos[:, None], vision, "decode", caches, pos,
+            cache_shards)
+        x = rms_norm(x, self._cast_compute(params["final_norm"]),
+                     cfg.norm_eps)
+        logits = lm_head_logits(ctx, self._lm_weights(params, None),
+                                x[:, 0], cfg.vocab_size)
+        return logits, list(new_caches)
+
+    # ---- cache construction -------------------------------------------------
+
+    def global_cache_struct(self, batch_global: int, max_len: int,
+                            cache_shards: int, dtype=jnp.bfloat16):
+        """ShapeDtypeStructs for the GLOBAL (unsharded) decode caches."""
+        cfg = self.cfg
+        dims = self.dims
+        out = []
+        for slot in range(cfg.group_size):
+            kind = cfg.slot_kind(slot)
+            if kind == ATTN:
+                akind = cfg.slot_attn_kind(slot)
+                C, _ = attention.cache_spec(cfg, dims, akind, max_len,
+                                            cache_shards)
+                sh = (cfg.num_groups, batch_global, C, dims.n_kv_heads,
+                      dims.head_dim)
+                c = (jax.ShapeDtypeStruct(sh, dtype),
+                     jax.ShapeDtypeStruct(sh, dtype))
+            elif kind == RWKV:
+                nH, _, hd = rwkv.rwkv_dims(cfg, self.tp)
+                c = (jax.ShapeDtypeStruct(
+                        (cfg.num_groups, batch_global, nH, hd, hd),
+                        jnp.float32),
+                     jax.ShapeDtypeStruct(
+                        (cfg.num_groups, batch_global, 1, cfg.d_model),
+                        dtype))
+            else:  # MAMBA
+                di, _ = mamba.mamba_dims(cfg, self.tp)
+                c = (jax.ShapeDtypeStruct(
+                        (cfg.num_groups, batch_global, di,
+                         cfg.mamba_d_state), jnp.float32),
+                     jax.ShapeDtypeStruct(
+                        (cfg.num_groups, batch_global, cfg.mamba_conv - 1,
+                         di), dtype))
+            out.append(c)
+        return out
+
+    def cache_pspecs(self, batch_axes: tuple):
+        """PartitionSpecs matching global_cache_struct / init_cache.
+
+        Attention caches are sequence-sharded over self.seq_shard_axes;
+        recurrent states shard their channel/head dim over the model axis.
+        """
+        cfg = self.cfg
+        b = tuple(batch_axes) if batch_axes else None
+        seq = tuple(self.seq_shard_axes)
+        out = []
+        for slot in range(cfg.group_size):
+            kind = cfg.slot_kind(slot)
+            if kind == ATTN:
+                s = P(None, b, seq)
+                out.append((s, s))
+            elif kind == RWKV:
+                out.append((P(None, b, "model"), P(None, b)))
+            else:
+                out.append((P(None, b, "model"), P(None, b, None, "model")))
+        return out
+
+    def init_cache(self, batch: int, max_len: int, cache_shards: int,
+                   dtype=jnp.bfloat16):
+        """Zero caches (list per slot of (n_groups, ...)-stacked pytrees),
+        *local* shapes for one device; use cache_struct for global."""
+        cfg, dims = self.cfg, self.dims
+        out = []
+        for slot in range(cfg.group_size):
+            kind = cfg.slot_kind(slot)
+            if kind == ATTN:
+                akind = cfg.slot_attn_kind(slot)
+                _, cl = attention.cache_spec(cfg, dims, akind, max_len,
+                                             cache_shards)
+                kv = dims.n_kv_heads
+                c = (
+                    jnp.zeros((cfg.num_groups, batch, cl, kv, dims.head_dim),
+                              dtype),
+                    jnp.zeros((cfg.num_groups, batch, cl, kv, dims.head_dim),
+                              dtype),
+                )
+            elif kind == RWKV:
+                _, hl, hd = rwkv.rwkv_dims(cfg, self.tp)
+                c = (
+                    jnp.zeros((cfg.num_groups, batch, hl, hd, hd),
+                              jnp.float32),
+                    jnp.zeros((cfg.num_groups, batch, 1, cfg.d_model), dtype),
+                )
+            else:  # MAMBA
+                _, dil = mamba.mamba_dims(cfg, self.tp)
+                c = (
+                    jnp.zeros(
+                        (cfg.num_groups, batch, dil, cfg.mamba_d_state),
+                        jnp.float32),
+                    jnp.zeros(
+                        (cfg.num_groups, batch, cfg.mamba_conv - 1, dil),
+                        dtype),
+                )
+            out.append(c)
+        return out

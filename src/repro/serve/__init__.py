@@ -1,0 +1,2 @@
+"""Serving: batched prefill + decode against sharded KV caches."""
+from .engine import ServeConfig, make_prefill_step, make_decode_step

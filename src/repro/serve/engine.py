@@ -1,0 +1,48 @@
+"""Serving engine: batched prefill and decode steps for shard_map.
+
+``serve_step`` for the decode input shapes is ONE new token against a KV
+cache of ``seq_len`` — greedy sampling on the gathered last-position
+logits.  The cache is sequence-sharded (attention.py); for batch-1
+long-context the sharding axes extend over the data axes too.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 4096
+    cache_dtype: str = "bfloat16"
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+def make_prefill_step(model: Model, scfg: ServeConfig, *, cache_shards: int):
+    def prefill_step(params, ids, vision=None):
+        logits, caches = model.prefill(
+            params, ids, vision, max_len=scfg.max_len,
+            cache_shards=cache_shards)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, caches
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, scfg: ServeConfig, *, cache_shards: int):
+    def decode_step(params, token, pos, caches, vision=None):
+        logits, caches = model.decode(
+            params, token, pos, caches, vision, cache_shards=cache_shards)
+        if scfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits / scfg.temperature, axis=-1).astype(
+                jnp.int32)
+        return nxt, caches
+
+    return decode_step

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, state, step, data, checkpointing."""
+from .optim import OptimConfig, OptState, apply_updates, init_opt_state, schedule
+from .train_step import TrainConfig, TrainState, init_train_state, make_train_step
+from .data import DataConfig, Pipeline
+from . import checkpoint

@@ -1,0 +1,40 @@
+"""Minimal pytree checkpointing (npz-backed; no orbax in this image)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save(path: str, tree) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16 cast
+            arr = arr.astype(np.float32)
+        flat[_keystr(kp)] = arr
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (shapes must match)."""
+    with np.load(path) as data:
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+        new_leaves = []
+        for kp, leaf in leaves_with_path:
+            arr = data[_keystr(kp)]
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(
+                    f"checkpoint mismatch at {_keystr(kp)}: "
+                    f"{arr.shape} vs {tuple(leaf.shape)}")
+            new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

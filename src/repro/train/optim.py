@@ -1,0 +1,105 @@
+"""Optimizers and LR schedules.
+
+The paper trains with SGD + momentum 0.9, weight decay 1e-4, step-decay
+LR (x0.1 at milestones) — Table 3.  We implement UMSGD (App. I, Eq. 45),
+whose l=0 / l=1 special cases are heavy-ball and Nesterov, plus AdamW for
+the transformer configs, all as pure pytree transforms (no optax
+dependency in this offline image).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    name: str = "sgdm"          # sgdm | adamw
+    lr: float = 0.1
+    momentum: float = 0.9
+    nesterov: bool = False      # UMSGD l=1 vs l=0
+    weight_decay: float = 1e-4
+    # schedule
+    warmup_steps: int = 0
+    decay_milestones: tuple = ()   # steps at which lr *= decay_factor
+    decay_factor: float = 0.1
+    # adamw
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+
+
+class OptState(NamedTuple):
+    mu: dict            # momentum / first moment
+    nu: dict | None     # second moment (adamw) or None-like zeros
+    count: jnp.ndarray
+
+
+def init_opt_state(cfg: OptimConfig, params) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    nu = jax.tree.map(jnp.zeros_like, params) if cfg.name == "adamw" else None
+    return OptState(mu=zeros, nu=nu, count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: OptimConfig, step) -> jnp.ndarray:
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps > 0:
+        lr = lr * jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    for m in cfg.decay_milestones:
+        lr = jnp.where(step >= m, lr * cfg.decay_factor, lr)
+    return lr
+
+
+def apply_updates(cfg: OptimConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state)."""
+    step = state.count
+    lr = schedule(cfg, step)
+
+    if cfg.name == "sgdm":
+        def upd(p, g, m):
+            g = g + cfg.weight_decay * p
+            m_new = cfg.momentum * m + g
+            if cfg.nesterov:
+                step_dir = g + cfg.momentum * m_new
+            else:
+                step_dir = m_new
+            return (p - lr * step_dir).astype(p.dtype), m_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        return new_p, OptState(mu=new_m, nu=state.nu, count=step + 1)
+
+    if cfg.name == "adamw":
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - cfg.b1 ** t
+        c2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, g, m, v):
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mhat = m_new / c1
+            vhat = v_new / c2
+            new_p = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                              + cfg.weight_decay * p)
+            return new_p.astype(p.dtype), m_new, v_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(*a) for a in zip(flat_p, flat_g, flat_m, flat_v)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            OptState(mu=treedef.unflatten([o[1] for o in out]),
+                     nu=treedef.unflatten([o[2] for o in out]),
+                     count=step + 1),
+        )
+
+    raise ValueError(cfg.name)

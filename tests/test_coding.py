@@ -1,0 +1,86 @@
+"""Entropy coding: level-occupancy probabilities (Prop. 6) integrate to 1
+and match Monte Carlo; Huffman code is a valid optimal prefix code
+(H <= E[len] <= H+1, Thm 5); Thm 3's bound dominates the empirical bits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    TruncNormStats,
+    code_length_bound,
+    entropy_bits,
+    expected_bits_per_coordinate,
+    expected_huffman_bits,
+    huffman_code_lengths,
+    level_probabilities,
+    normalized_magnitudes,
+    stochastic_round,
+    uniform_levels,
+)
+
+
+def stats_example():
+    return TruncNormStats(
+        mu=jnp.asarray([0.1, 0.3], jnp.float32),
+        sigma=jnp.asarray([0.05, 0.2], jnp.float32),
+        gamma=jnp.asarray([0.6, 0.4], jnp.float32),
+    )
+
+
+def test_level_probabilities_sum_to_one_and_match_mc():
+    stats = stats_example()
+    levels = uniform_levels(3)
+    probs = np.asarray(level_probabilities(levels, stats))
+    np.testing.assert_allclose(probs.sum(), 1.0, atol=1e-5)
+
+    # Monte Carlo: draw r from the mixture, stochastically round
+    rng = np.random.default_rng(0)
+    import scipy.stats
+    comps = rng.choice(2, size=400_000, p=np.asarray(stats.gamma))
+    r = np.empty(comps.shape)
+    for i, (mu, sig) in enumerate(zip(stats.mu, stats.sigma)):
+        a, b = (0 - mu) / sig, (1 - mu) / sig
+        m = comps == i
+        r[m] = scipy.stats.truncnorm.rvs(a, b, loc=float(mu),
+                                         scale=float(sig), size=m.sum(),
+                                         random_state=rng)
+    u = jnp.asarray(rng.random(r.shape), jnp.float32)
+    idx = np.asarray(stochastic_round(jnp.asarray(r, jnp.float32), levels, u))
+    mc = np.bincount(idx, minlength=len(levels)) / len(idx)
+    np.testing.assert_allclose(probs, mc, atol=5e-3)
+
+
+def test_huffman_is_valid_optimal_prefix_code():
+    probs = np.asarray([0.5, 0.2, 0.15, 0.1, 0.05])
+    lengths = huffman_code_lengths(probs)
+    # Kraft inequality with equality for a complete code
+    assert abs(sum(2.0 ** -l for l in lengths) - 1.0) < 1e-9
+    H = float(entropy_bits(jnp.asarray(probs)))
+    E = expected_huffman_bits(probs)
+    assert H <= E + 1e-9 <= H + 1
+
+
+def test_bits_per_coordinate_and_thm3_bound():
+    stats = stats_example()
+    levels = uniform_levels(3)
+    bits = expected_bits_per_coordinate(levels, stats)
+    assert 1.0 < bits < 5.0  # 8 levels + sign, entropy-coded
+    d = 100_000
+    bound = code_length_bound(levels, stats, d)
+    # Thm 3 bound must dominate the empirical expectation
+    assert bound >= bits * d
+
+
+def test_adaptive_levels_cost_fewer_bits_than_uniform_on_peaky_dist():
+    from repro.core import alq_update
+    stats = TruncNormStats(
+        mu=jnp.asarray([0.02], jnp.float32),
+        sigma=jnp.asarray([0.02], jnp.float32),
+        gamma=jnp.asarray([1.0], jnp.float32),
+    )
+    uni = uniform_levels(3)
+    ada = alq_update(uni, stats, sweeps=10)
+    # adaptive grid concentrates levels where the mass is -> higher
+    # entropy of symbols (more informative) but *much* lower variance;
+    # Fig. 6's qualitative shape:
+    assert float(ada[1]) < float(uni[1])

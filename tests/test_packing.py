@@ -1,0 +1,44 @@
+"""Property tests (hypothesis): k-bit packing round-trips exactly for any
+symbol stream, bit width, and length; packed size is exactly
+ceil(n*k/32) words."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import packing
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.integers(min_value=1, max_value=16),
+    n=st.integers(min_value=1, max_value=2000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pack_unpack_roundtrip(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2 ** bits, size=n, dtype=np.int64)
+    packed = packing.pack(jnp.asarray(vals, jnp.int32), bits)
+    assert packed.shape[0] == packing.packed_words(n, bits)
+    back = packing.unpack(packed, n, bits)
+    np.testing.assert_array_equal(np.asarray(back), vals)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    num_levels=st.integers(min_value=2, max_value=128),
+    n=st.integers(min_value=1, max_value=1000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_signed_roundtrip(num_levels, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-(num_levels - 1), num_levels, size=n)
+    packed = packing.pack_signed(jnp.asarray(codes, jnp.int32), num_levels)
+    back = packing.unpack_signed(packed, n, num_levels)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+def test_wire_bits():
+    assert packing.wire_bits_for(2) == 2      # ternary: {-1, 0, 1}
+    assert packing.wire_bits_for(8) == 4      # 3-bit levels + sign
+    assert packing.wire_bits_for(16) == 5

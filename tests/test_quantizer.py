@@ -1,0 +1,77 @@
+"""Core quantizer semantics: unbiasedness, the exact variance formula
+(Eqs. 1-2), bucket normalization, and Theorem 2's variance bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    exp_levels,
+    normalized_magnitudes,
+    quantization_variance,
+    quantize,
+    ternary_levels,
+    uniform_levels,
+)
+
+
+@pytest.mark.parametrize("norm_type", ["l2", "linf"])
+@pytest.mark.parametrize("levels_fn", [
+    lambda: uniform_levels(3),
+    lambda: exp_levels(3, 0.5),
+    lambda: ternary_levels(),
+])
+def test_unbiased_and_variance_formula(norm_type, levels_fn):
+    levels = levels_fn()
+    key = jax.random.PRNGKey(0)
+    v = jax.random.normal(key, (4096,)) * 0.02
+    keys = jax.random.split(jax.random.PRNGKey(1), 512)
+    qs = jax.vmap(
+        lambda k: quantize(v, levels, k, bucket_size=512, norm_type=norm_type)
+    )(keys)
+    # unbiased: E[Q(v)] = v, tested against the exact MC-noise envelope
+    # (max over d coords of a mean of n samples: ~sqrt(2 ln d) sigmas)
+    mc_mean_err = jnp.abs(qs.mean(0) - v).max()
+    envelope = 5.0 * qs.std(0).max() / np.sqrt(qs.shape[0])
+    assert mc_mean_err < envelope
+
+    # exact variance formula matches MC
+    mc_var = jnp.mean(jnp.sum((qs - v) ** 2, axis=1))
+    exact = quantization_variance(v, levels, bucket_size=512,
+                                  norm_type=norm_type)
+    np.testing.assert_allclose(mc_var, exact, rtol=0.15)
+
+
+def test_quantized_values_live_on_grid():
+    levels = uniform_levels(3)
+    v = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    q = quantize(v, levels, jax.random.PRNGKey(1), bucket_size=256,
+                 norm_type="linf")
+    r, norms = normalized_magnitudes(q, 256, "linf")
+    # every |q| / ||bucket|| must be (numerically) one of the levels
+    dist = jnp.min(jnp.abs(r[..., None] - levels[None, None]), axis=-1)
+    # the bucket norm of q can differ from v's, so renormalize by v's norm
+    _, vn = normalized_magnitudes(v, 256, "linf")
+    rq = jnp.abs(q.reshape(-1, 256)) / vn[:, None]
+    dist = jnp.min(jnp.abs(rq[..., None] - levels[None, None]), axis=-1)
+    assert float(dist.max()) < 1e-6
+
+
+def test_zero_vector_is_fixed_point():
+    levels = uniform_levels(3)
+    v = jnp.zeros((512,))
+    q = quantize(v, levels, jax.random.PRNGKey(0), bucket_size=128)
+    assert float(jnp.abs(q).max()) == 0.0
+
+
+def test_theorem2_variance_bound():
+    """E||Q(v)-v||^2 <= eps_Q ||v||^2 with eps_Q from Thm 2."""
+    levels = exp_levels(3, 0.5)
+    d = 8192
+    v = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    exact = quantization_variance(v, levels, bucket_size=d, norm_type="l2")
+    ratios = levels[2:] / levels[1:-1]
+    jstar = jnp.max(ratios)
+    # eps_Q (p -> 1 limit of the K_p term, generous)
+    eps = (jstar - 1) ** 2 / (4 * jstar) + levels[1] * jnp.sqrt(d)
+    assert float(exact) <= float(eps * jnp.sum(v * v))
