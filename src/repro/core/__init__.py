@@ -15,6 +15,7 @@ from .quantize import (
     NORM_LINF,
     QuantizedTensor,
     bucket_norm,
+    code_dtype,
     decode,
     encode,
     normalized_magnitudes,
@@ -28,6 +29,7 @@ from .stats import (
     expected_variance,
     fit_bucket_stats,
     merge_stats,
+    stats_from_moments,
     mixture_cdf,
     mixture_inverse_cdf,
     mixture_pdf,

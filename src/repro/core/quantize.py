@@ -4,7 +4,8 @@ A flat gradient is padded to a multiple of ``bucket_size``, reshaped to
 (num_buckets, bucket_size), and each bucket is normalized by its own Lq
 norm (the "bucketing trick", Sec. 5).  Each normalized magnitude is
 stochastically rounded to one of the levels; the wire representation is a
-*signed level index* (int8) plus one fp32 norm per bucket.
+*signed level index* (int8 — see ``code_dtype``) plus one fp32 norm per
+bucket.
 
 ``encode`` / ``decode`` are the reference (pure-jnp) pair; the Pallas
 kernels in ``repro.kernels`` implement the same contract with VMEM
@@ -26,9 +27,20 @@ NORM_L1 = "l1"
 class QuantizedTensor(NamedTuple):
     """Wire representation of one quantized (bucketed) tensor."""
 
-    codes: jnp.ndarray  # (num_buckets, bucket_size) int16 signed level index
+    codes: jnp.ndarray  # (num_buckets, bucket_size) int8 signed level index
     norms: jnp.ndarray  # (num_buckets,) f32 bucket norms
     dim: int            # original (unpadded) length
+
+
+def code_dtype(num_levels: int):
+    """Dtype of signed level indices in [-(L-1), L-1].
+
+    int8 covers every grid up to 128 levels (bits <= 7); only the 8-bit
+    edge (256 levels, |index| up to 255) needs int16.  Using the narrow
+    dtype halves the pre-pack HBM footprint on the paper's operating
+    points (2-4 bits).
+    """
+    return jnp.int8 if num_levels <= 128 else jnp.int16
 
 
 def bucket_norm(vb: jnp.ndarray, norm_type: str) -> jnp.ndarray:
@@ -104,7 +116,7 @@ def encode(
     u = jax.random.uniform(key, r.shape, dtype=r.dtype)
     idx = stochastic_round(r, levels, u)
     sign = jnp.sign(pad_to_buckets(v, bucket_size))
-    codes = (idx * sign).astype(jnp.int16)
+    codes = (idx * sign).astype(code_dtype(levels.shape[0]))
     return QuantizedTensor(codes=codes, norms=norms.astype(jnp.float32), dim=d)
 
 

@@ -162,6 +162,37 @@ def expected_variance(stats: TruncNormStats, levels: jnp.ndarray) -> jnp.ndarray
     return jnp.sum(seg)
 
 
+def stats_from_moments(
+    mu: jnp.ndarray,
+    var: jnp.ndarray,
+    bucket_norms: jnp.ndarray,
+    *,
+    weighted: bool = True,
+    max_components: int = 64,
+) -> TruncNormStats:
+    """Mixture from per-bucket first/second moments of |r|.
+
+    This is the cheap half of the fitting path: the fused
+    ``bucket_stats`` kernel emits (norm, mean_r, var_r) in one HBM sweep
+    and this function turns them into the (subsampled, re-weighted)
+    ``TruncNormStats`` the level updates consume.
+    """
+    sigma = jnp.maximum(jnp.sqrt(var), _MIN_SIGMA)
+
+    nb = mu.shape[0]
+    if nb > max_components:
+        stride = nb // max_components
+        idx = jnp.arange(max_components) * stride
+        mu, sigma, bucket_norms = mu[idx], sigma[idx], bucket_norms[idx]
+
+    if weighted:
+        w = bucket_norms ** 2
+    else:
+        w = jnp.ones_like(bucket_norms)
+    gamma = w / jnp.maximum(jnp.sum(w), 1e-30)
+    return TruncNormStats(mu=mu, sigma=sigma, gamma=gamma)
+
+
 def fit_bucket_stats(
     r: jnp.ndarray,
     bucket_norms: jnp.ndarray,
@@ -188,20 +219,8 @@ def fit_bucket_stats(
         cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
         mu = jnp.sum(r * mask, axis=1) / cnt
         var = jnp.sum(mask * (r - mu[:, None]) ** 2, axis=1) / cnt
-    sigma = jnp.maximum(jnp.sqrt(var), _MIN_SIGMA)
-
-    nb = mu.shape[0]
-    if nb > max_components:
-        stride = nb // max_components
-        idx = jnp.arange(max_components) * stride
-        mu, sigma, bucket_norms = mu[idx], sigma[idx], bucket_norms[idx]
-
-    if weighted:
-        w = bucket_norms ** 2
-    else:
-        w = jnp.ones_like(bucket_norms)
-    gamma = w / jnp.maximum(jnp.sum(w), 1e-30)
-    return TruncNormStats(mu=mu, sigma=sigma, gamma=gamma)
+    return stats_from_moments(mu, var, bucket_norms, weighted=weighted,
+                              max_components=max_components)
 
 
 def merge_stats(stats: TruncNormStats, axis_name) -> TruncNormStats:

@@ -1,0 +1,16 @@
+"""Distributed communication engine: quantized collectives + FSDP.
+
+``sync``   ENCODE -> collective -> DECODE (Algorithm 1, lines 6-9) in two
+           bit-packed wire modes, plus the sufficient-statistics gather
+           and the schedule-gated level update.
+``fsdp``   Flat-parameter substrate: per-slot flatten metadata, chunk
+           planning, and the all-gather forward / quantized
+           reduce-scatter backward used by big-arch configs.
+"""
+from . import fsdp, sync  # noqa: F401
+from .sync import (  # noqa: F401
+    SyncMetrics,
+    gather_stats,
+    maybe_update_levels,
+    quantized_allreduce,
+)

@@ -1,0 +1,206 @@
+"""Flat-parameter FSDP substrate.
+
+Parameters of one layer slot are stored as ONE flat, zero-padded fp32
+vector sharded over the data axes.  The forward materializes a slot with
+a tiled ``all_gather``; the backward of that gather is a *quantized
+reduce-scatter* (``custom_vjp``): each worker ENCODEs its local cotangent
+on the scheme's grid and ships each peer only that peer's shard as packed
+words — so FSDP training moves ``b``-bit gradients in BOTH directions of
+the wire instead of fp32.
+
+Layout invariants (enforced by ``padded_flat_len`` / ``chunk_plan``):
+
+  padded length  Lp = nb_p * bucket_size
+  nb_p % (M * k) == 0
+
+so every shard holds whole buckets (the encode never straddles a shard
+boundary) and the backward can run in ``k`` rounds — round c covers
+slice ``[c*ppr, (c+1)*ppr)`` of every shard's buckets — letting the
+encode of round c+1 overlap the all-to-all of round c.
+
+Zero-padding is an exact fixed point of ENCODE/DECODE (sign 0 -> code 0),
+so padded master parameters never drift.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.schemes import QuantScheme
+from .sync import _axes_rank, _axes_size, _decode_streams, _encode
+
+# ---------------------------------------------------------------------------
+# flatten metadata
+# ---------------------------------------------------------------------------
+
+def flatten_meta(specs: dict, prefix: tuple = ()) -> list:
+    """Param-spec tree -> deterministic flat layout.
+
+    ``specs`` leaves are ``(shape, init_code)`` pairs (see
+    ``models.transformer.slot_param_specs``).  Returns a list of
+    ``(path, shape, init_code)`` in sorted-name order at every level, so
+    the layout is reproducible from the spec alone.
+    """
+    meta = []
+    for name in sorted(specs):
+        sub = specs[name]
+        if isinstance(sub, dict):
+            meta.extend(flatten_meta(sub, prefix + (name,)))
+        else:
+            shape, code = sub
+            meta.append((prefix + (name,), tuple(shape), code))
+    return meta
+
+
+def flat_size(meta: list) -> int:
+    return sum(math.prod(shape) for _, shape, _ in meta)
+
+
+def chunk_plan(n: int, bucket_size: int, M: int) -> tuple[int, int]:
+    """(k, nb_padded) for an n-element flat vector on M workers.
+
+    Picks the deepest chunking k in {8, 4, 2, 1} that still gives every
+    worker at least one bucket per round, then pads the bucket count to a
+    multiple of ``M * k`` so rounds and shards tile exactly.
+    """
+    nb = -(-n // bucket_size)
+    k = 1
+    for cand in (8, 4, 2):
+        if cand * M <= nb:
+            k = cand
+            break
+    group = M * k
+    return k, -(-nb // group) * group
+
+
+def padded_flat_len(meta: list, bucket_size: int, world: int,
+                    shards: int | None = None) -> int:
+    """Padded flat length: bucket-, round-, and shard-divisible."""
+    m = world if shards is None else math.lcm(world, shards)
+    _, nb_p = chunk_plan(flat_size(meta), bucket_size, m)
+    return nb_p * bucket_size
+
+
+def unflatten(flat: jnp.ndarray, meta: list, dtype) -> dict:
+    """Flat (padded) vector -> nested param dict per ``meta``'s layout."""
+    tree: dict = {}
+    off = 0
+    for path, shape, _ in meta:
+        size = math.prod(shape)
+        leaf = jax.lax.slice_in_dim(flat, off, off + size)
+        node = tree
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = leaf.reshape(shape).astype(dtype)
+        off += size
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# quantized reduce-scatter (the gather's backward)
+# ---------------------------------------------------------------------------
+
+def _rounds_for(shard_nb: int) -> int:
+    # The backward only sees the (already padded) cotangent shape, so the
+    # round count is re-derived here instead of threaded from chunk_plan.
+    # Correctness rests solely on the divisibility check below; k may
+    # legitimately exceed chunk_plan's k when the padding allows it.
+    for cand in (8, 4, 2):
+        if shard_nb % cand == 0 and shard_nb > cand:
+            return cand
+    return 1
+
+
+def _quantized_reduce_scatter(g, levels, key, *, axes, bucket_size,
+                              norm_type, use_pallas):
+    """(Lp,) per-worker cotangent -> (Lp/M,) shard of the worker MEAN.
+
+    Runs in rounds over sub-slices of every shard so the ENCODE of round
+    c+1 is independent of (and can overlap) the all-to-all of round c.
+    Wire per worker: ceil(Lp*b/32) words + Lp/bucket norms, total — the
+    bandwidth-optimal reduce-scatter volume.
+    """
+    M = _axes_size(axes)
+    # worker-distinct rounding randomness even when the caller passes a
+    # replicated key: correlated rounding across workers would forfeit
+    # the 1/M variance averaging of the mean
+    key = jax.random.fold_in(key, _axes_rank(axes))
+    L = levels.shape[0]
+    nb = g.shape[0] // bucket_size
+    shard_nb = nb // M
+    k = _rounds_for(shard_nb)
+    ppr = shard_nb // k  # buckets per shard per round
+    gb = g.reshape(M, shard_nb, bucket_size)
+
+    pieces = []
+    for c in range(k):
+        sub = jax.lax.slice_in_dim(gb, c * ppr, (c + 1) * ppr, axis=1)
+        vb = sub.reshape(M * ppr, bucket_size)
+        codes, norms = _encode(vb, levels, jax.random.fold_in(key, c),
+                               norm_type, use_pallas)
+        words = jnp.stack([
+            packing.pack_signed(
+                jax.lax.slice_in_dim(codes, j * ppr, (j + 1) * ppr), L)
+            for j in range(M)])                       # (M, Ws)
+        if M > 1:
+            words = jax.lax.all_to_all(words, axes, 0, 0, tiled=True)
+            rn = jax.lax.all_to_all(norms.reshape(M, ppr), axes, 0, 0,
+                                    tiled=True)
+        else:
+            rn = norms.reshape(M, ppr)
+        vals = _decode_streams(words, rn, ppr * bucket_size, levels,
+                               use_pallas)             # (M, ppr*bs)
+        pieces.append(vals.mean(0))
+    return jnp.concatenate(pieces)
+
+
+def _float0_zeros(x):
+    """Cotangent for a non-differentiable (integer / key) input."""
+    return np.zeros(jnp.shape(x), jax.dtypes.float0)
+
+
+def make_gather(data_axes, scheme: QuantScheme, fsdp_sync: str = "quantized",
+                *, use_pallas: bool = False):
+    """Returns ``gather(shard, levels, key) -> full`` for one flat slot.
+
+    Forward: tiled all_gather of the param shard over ``data_axes``.
+    Backward: reduce-scatter of the cotangent to the worker MEAN —
+    quantized (packed words + norms on the wire) when
+    ``fsdp_sync == 'quantized'`` and the scheme quantizes, else fp32
+    ``psum_scatter``.
+
+    ``use_pallas`` defaults to False: on CPU the interpret-mode kernels
+    materialize every grid block (see launch/dryrun.py); flip it on for
+    real-TPU runs.
+    """
+    axes = tuple(data_axes)
+    quantized = fsdp_sync == "quantized" and scheme.quantized
+
+    def gather(shard, levels, key):
+        @jax.custom_vjp
+        def f(s, lv, k):
+            return jax.lax.all_gather(s, axes, tiled=True)
+
+        def fwd(s, lv, k):
+            return jax.lax.all_gather(s, axes, tiled=True), (lv, k)
+
+        def bwd(res, g):
+            lv, k = res
+            if quantized:
+                ds = _quantized_reduce_scatter(
+                    g, lv, k, axes=axes, bucket_size=scheme.bucket_size,
+                    norm_type=scheme.norm_type, use_pallas=use_pallas)
+            else:
+                M = _axes_size(axes)
+                ds = jax.lax.psum_scatter(
+                    g, axes, scatter_dimension=0, tiled=True) / M
+            return ds, jnp.zeros_like(lv), _float0_zeros(k)
+
+        f.defvjp(fwd, bwd)
+        return f(shard, levels, key)
+
+    return gather

@@ -1,0 +1,296 @@
+"""Quantized gradient synchronization (Algorithm 1, lines 2-9).
+
+Everything here runs INSIDE ``shard_map``: collectives are expressed over
+named mesh axes (``axes``), and what travels over the interconnect is the
+bit-packed wire format of ``core/packing.py`` — ``ceil(n*b/32)`` uint32
+words plus one fp32 norm per bucket — never dequantized fp32.
+
+Wire modes
+----------
+``all_gather``  Every worker ENCODEs its local gradient (fused Pallas
+    kernel), packs the signed level indices into a dense word stream, and
+    all-gathers (words, norms).  One decode+average pass over the M*nb
+    gathered buckets yields the aggregate; since every worker decodes the
+    same gathered bytes, the result is bit-identical everywhere (the
+    paper's broadcast-all scheme, Sec. 5).
+
+``two_phase``   The reduce direction is compressed with the scheme's own
+    grid and moved as an all-to-all (a true quantized reduce-scatter:
+    each worker ships each peer only that peer's shard).  Each worker
+    then RE-quantizes its shard of the aggregate on a fixed 8-bit
+    uniform/L-inf grid — fine enough that the second rounding does not
+    forfeit the 1/M variance averaging (see benchmarks/bench_twophase) —
+    and the packed result is all-gathered.  Total wire is ~(b + 8/M + 9)
+    bits/coord instead of the broadcast scheme's M*b.
+
+``fp32``        Plain psum mean (SuperSGD / debugging baseline).
+
+``gather_stats`` is the sufficient-statistics path (Algorithm 1, line 4):
+one fused ``bucket_stats`` sweep, strided subsampling to
+``max_stat_components``, and a tiny cross-worker mixture merge.
+``maybe_update_levels`` wraps it in ``lax.cond`` so the ~10k non-update
+steps pay nothing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.levels import uniform_levels
+from repro.core.quantize import NORM_LINF, pad_to_buckets
+from repro.core.schemes import QuantScheme, SchemeState
+from repro.core.stats import TruncNormStats, merge_stats, stats_from_moments
+from repro.kernels import ops
+from repro.kernels.quantize import DEFAULT_BUCKET_TILE
+
+# Phase-2 grid of the two_phase mode: 8-bit uniform levels under L-inf
+# bucket normalization (QSGDinf at 8 bits).  L-inf spreads the aggregate's
+# normalized magnitudes over [0, 1], so the 1/255 grid step stays well
+# below phase-1 noise at any bucket size.
+TWO_PHASE_BITS = 8
+
+
+class SyncMetrics(NamedTuple):
+    comm_bits_per_coord: jnp.ndarray
+    quant_error: jnp.ndarray  # local ||Q(g) - g||^2 (own encode)
+
+
+# ---------------------------------------------------------------------------
+# axis helpers (static under shard_map)
+# ---------------------------------------------------------------------------
+
+def _axes_size(axes) -> int:
+    n = 1
+    for ax in axes:
+        n *= jax.lax.axis_size(ax)
+    return n
+
+
+def _axes_rank(axes):
+    """Row-major global rank over the (ordered) named axes."""
+    r = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        r = r * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return r
+
+
+def _bucketize(flat: jnp.ndarray, bucket_size: int,
+               group: int = DEFAULT_BUCKET_TILE) -> jnp.ndarray:
+    """(d,) -> (nb_p, bucket_size) zero-padded; nb_p group-aligned.
+
+    Zero buckets are exact fixed points of ENCODE/DECODE (norm 0, code 0),
+    so padding never leaks into the aggregate.
+    """
+    vb = pad_to_buckets(flat, bucket_size)
+    nb = vb.shape[0]
+    nb_p = -(-nb // group) * group
+    if nb_p != nb:
+        vb = jnp.concatenate(
+            [vb, jnp.zeros((nb_p - nb, bucket_size), vb.dtype)])
+    return vb
+
+
+def _encode(vb, levels, key, norm_type, use_pallas):
+    u = jax.random.uniform(key, vb.shape, jnp.float32)
+    return ops.quantize_op(vb, u, levels, norm_type=norm_type,
+                           use_pallas=use_pallas)
+
+
+def _decode_streams(words, norms, n_per_stream, levels, use_pallas):
+    """(M, W) packed words + (M, nb) norms -> (M, n_per_stream) values.
+
+    One fused dequantize pass over all M*nb gathered buckets.
+    """
+    L = levels.shape[0]
+    M, nb = norms.shape
+    bs = n_per_stream // nb
+    sym = jax.vmap(lambda w: packing.unpack_signed(w, n_per_stream, L))(words)
+    vals = ops.dequantize_op(sym.reshape(M * nb, bs), norms.reshape(-1),
+                             levels, use_pallas=use_pallas)
+    return vals.reshape(M, n_per_stream)
+
+
+# ---------------------------------------------------------------------------
+# wire modes
+# ---------------------------------------------------------------------------
+
+def _allreduce_all_gather(flat, scheme, levels, key, axes, use_pallas):
+    d = flat.shape[0]
+    L = levels.shape[0]
+    vb = _bucketize(flat, scheme.bucket_size)
+    nb, bs = vb.shape
+    n = nb * bs
+
+    codes, norms = _encode(vb, levels, key, scheme.norm_type, use_pallas)
+    words = packing.pack_signed(codes, L)
+
+    if axes:
+        gw = jax.lax.all_gather(words, axes)   # (M, W) uint32
+        gn = jax.lax.all_gather(norms, axes)   # (M, nb) f32
+    else:
+        gw, gn = words[None], norms[None]
+    M = gw.shape[0]
+
+    per_worker = _decode_streams(gw, gn, n, levels, use_pallas)
+    out = per_worker.mean(0)[:d]
+
+    rank = _axes_rank(axes) if axes else jnp.zeros((), jnp.int32)
+    own = jnp.take(per_worker, rank, axis=0)[:d]
+    qerr = jnp.sum((own - flat) ** 2)
+    bits = (words.size + norms.size) * 32.0 / d
+    return out, SyncMetrics(jnp.float32(bits), qerr)
+
+
+def _allreduce_two_phase(flat, scheme, levels, key, axes, use_pallas):
+    d = flat.shape[0]
+    L = levels.shape[0]
+    M = _axes_size(axes) if axes else 1
+    # nb_p % (M * tile) == 0: whole buckets per shard AND tile-aligned
+    # encode/decode on both the full and the per-shard bucket counts.
+    vb = _bucketize(flat, scheme.bucket_size, group=M * DEFAULT_BUCKET_TILE)
+    nb, bs = vb.shape
+    shard_nb = nb // M
+    shard_n = shard_nb * bs
+
+    # ---- phase 1: quantized reduce-scatter (scheme grid) ----
+    codes, norms = _encode(vb, levels, key, scheme.norm_type, use_pallas)
+    words = jnp.stack([
+        packing.pack_signed(
+            jax.lax.slice_in_dim(codes, j * shard_nb, (j + 1) * shard_nb), L)
+        for j in range(M)])                               # (M, Ws)
+    if M > 1:
+        rw = jax.lax.all_to_all(words, axes, 0, 0, tiled=True)
+        rn = jax.lax.all_to_all(norms.reshape(M, shard_nb), axes, 0, 0,
+                                tiled=True)
+    else:
+        rw, rn = words, norms.reshape(M, shard_nb)
+    shard_mean = _decode_streams(rw, rn, shard_n, levels, use_pallas)
+    shard_mean = shard_mean.mean(0).reshape(shard_nb, bs)
+
+    # ---- phase 2: re-quantize the aggregate, broadcast compressed ----
+    lv2 = uniform_levels(TWO_PHASE_BITS)
+    L2 = lv2.shape[0]
+    c2, n2 = _encode(shard_mean, lv2, jax.random.fold_in(key, 0x2FA5E),
+                     NORM_LINF, use_pallas)
+    w2 = packing.pack_signed(c2, L2)
+    if axes:
+        gw2 = jax.lax.all_gather(w2, axes)     # (M, Ws2)
+        gn2 = jax.lax.all_gather(n2, axes)     # (M, shard_nb)
+    else:
+        gw2, gn2 = w2[None], n2[None]
+    out = _decode_streams(gw2, gn2, shard_n, lv2, use_pallas)
+    out = out.reshape(-1)[:d]
+
+    # local decode of own phase-1 contribution for the error metric
+    own = ops.dequantize_op(codes, norms, levels, use_pallas=use_pallas)
+    qerr = jnp.sum((own.reshape(-1)[:d] - flat) ** 2)
+    bits = (words.size + norms.size + w2.size + n2.size) * 32.0 / d
+    return out, SyncMetrics(jnp.float32(bits), qerr)
+
+
+def quantized_allreduce(
+    flat: jnp.ndarray,
+    scheme: QuantScheme,
+    state: SchemeState,
+    key: jax.Array,
+    *,
+    axes=(),
+    mode: str = "all_gather",
+    use_pallas: bool = True,
+) -> tuple[jnp.ndarray, SyncMetrics]:
+    """ENCODE -> collective -> DECODE -> average; replicated output.
+
+    Args:
+      flat: (d,) local gradient (call inside shard_map; no implicit psum).
+      scheme / state: quantization method and its adaptive state (levels).
+      key: PRNG key, REPLICATED across workers — worker-distinct
+        randomness is derived by folding in the global rank.
+      axes: named mesh axes to synchronize over (may be empty: M=1).
+      mode: 'fp32' | 'all_gather' | 'two_phase'.
+
+    Returns (aggregate mean, SyncMetrics); the aggregate is bit-identical
+    on every worker in all modes.
+    """
+    flat = flat.reshape(-1)
+    axes = tuple(axes)
+    if mode == "fp32" or not scheme.quantized:
+        if axes:
+            out = jax.lax.psum(flat, axes) / _axes_size(axes)
+        else:
+            out = flat
+        return out, SyncMetrics(jnp.float32(32.0), jnp.float32(0.0))
+
+    levels = state.levels
+    key = jax.random.fold_in(key, _axes_rank(axes)) if axes else key
+    if mode == "all_gather":
+        return _allreduce_all_gather(flat, scheme, levels, key, axes,
+                                     use_pallas)
+    if mode == "two_phase":
+        return _allreduce_two_phase(flat, scheme, levels, key, axes,
+                                    use_pallas)
+    raise ValueError(f"unknown sync mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# sufficient statistics + schedule-gated level update
+# ---------------------------------------------------------------------------
+
+def gather_stats(
+    flat: jnp.ndarray,
+    scheme: QuantScheme,
+    *,
+    axes=(),
+    use_pallas: bool = True,
+) -> TruncNormStats:
+    """One-sweep sufficient statistics of the local gradient, merged
+    across workers (Algorithm 1, line 4).
+
+    A single fused ``bucket_stats`` pass emits per-bucket (norm, mean_r,
+    var_r); only ``max_stat_components`` scalars per worker travel in the
+    merge — this is the only communication the adaptive methods add.
+    """
+    flat = flat.reshape(-1)
+    axes = tuple(axes)
+    vb = _bucketize(flat, scheme.bucket_size)
+    norms, mu, var = ops.bucket_stats_op(vb, norm_type=scheme.norm_type,
+                                         use_pallas=use_pallas)
+    # keep only fully-populated buckets: alignment padding is all-zero,
+    # and a trailing partial bucket's intra-bucket zeros would bias its
+    # (mu, sigma) toward 0 — drop it unless it is the only bucket
+    nb_valid = max(flat.shape[0] // scheme.bucket_size, 1)
+    stats = stats_from_moments(
+        mu[:nb_valid], var[:nb_valid], norms[:nb_valid],
+        weighted=scheme.weighted_stats,
+        max_components=scheme.max_stat_components)
+    if axes:
+        stats = merge_stats(stats, axes)
+    return stats
+
+
+def maybe_update_levels(
+    flat: jnp.ndarray,
+    scheme: QuantScheme,
+    state: SchemeState,
+    do_update,
+    *,
+    axes=(),
+    use_pallas: bool = True,
+) -> SchemeState:
+    """Run the scheme's level adaptation iff ``do_update`` (traced bool).
+
+    ``lax.cond``-gated: on non-update steps neither the stats sweep nor
+    the (tiny) merge collective executes — the adaptive methods' extra
+    cost lands only on the paper's sparse schedule (App. K).
+    """
+    if not scheme.adaptive:
+        return state
+    flat = jax.lax.stop_gradient(flat.reshape(-1))
+
+    def upd(s):
+        stats = gather_stats(flat, scheme, axes=axes, use_pallas=use_pallas)
+        return scheme.update_state(s, stats)
+
+    return jax.lax.cond(do_update, upd, lambda s: s, state)

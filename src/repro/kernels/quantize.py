@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quantize import NORM_L2, NORM_LINF
+from repro.core.quantize import NORM_L2, NORM_LINF, code_dtype
 
 DEFAULT_BUCKET_TILE = 8
 
@@ -64,7 +64,7 @@ def _quantize_kernel(v_ref, u_ref, levels_ref, codes_ref, norms_ref, *, norm_typ
     idx = tau + (u < rho).astype(jnp.int32)
     sign = jnp.where(v > 0, 1, jnp.where(v < 0, -1, 0))
 
-    codes_ref[...] = (idx * sign).astype(jnp.int16)
+    codes_ref[...] = (idx * sign).astype(codes_ref.dtype)
     norms_ref[...] = norm
 
 
@@ -106,7 +106,7 @@ def quantize_pallas(
             pl.BlockSpec((bucket_tile,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nb, bs), jnp.int16),
+            jax.ShapeDtypeStruct((nb, bs), code_dtype(levels.shape[0])),
             jax.ShapeDtypeStruct((nb,), jnp.float32),
         ],
         interpret=interpret,

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.quantize import NORM_L2, NORM_LINF
+from repro.core.quantize import NORM_L2, NORM_LINF, code_dtype
 
 
 def _norms(vb: jnp.ndarray, norm_type: str) -> jnp.ndarray:
@@ -38,14 +38,15 @@ def quantize_ref(
     rho = (r - lo) / jnp.maximum(hi - lo, 1e-30)
     idx = tau + (u < rho)
     sign = jnp.sign(vb).astype(jnp.int32)
-    # int16: level indices reach 255 at 8 bits (int8 would overflow)
-    return (idx * sign).astype(jnp.int16), norms.astype(jnp.float32)
+    # int8 up to 128 levels (bits <= 7); the 8-bit edge widens to int16
+    return (idx * sign).astype(code_dtype(levels.shape[0])), norms.astype(
+        jnp.float32)
 
 
 def dequantize_ref(
     codes: jnp.ndarray, norms: jnp.ndarray, levels: jnp.ndarray
 ) -> jnp.ndarray:
-    """codes int16 signed + norms -> float32 values (num_buckets, bucket)."""
+    """codes (signed, any int dtype) + norms -> f32 (num_buckets, bucket)."""
     idx = jnp.abs(codes.astype(jnp.int32))
     mags = jnp.take(levels.astype(jnp.float32), idx)
     return mags * jnp.sign(codes.astype(jnp.float32)) * norms[:, None]

@@ -116,7 +116,8 @@ class Model:
                  model_axis: str = "model", data_axes: tuple = ("data",),
                  seq_shard_axes: tuple | None = None,
                  remat: str = "full", param_mode: str = "dp",
-                 fsdp_scheme=None, fsdp_sync: str = "quantized"):
+                 fsdp_scheme=None, fsdp_sync: str = "quantized",
+                 fsdp_use_pallas: bool = False):
         """remat: 'full' (recompute each layer group in bwd — O(1-layer)
         activation memory), 'dots' (save matmul outputs), or 'none'.
 
@@ -149,7 +150,8 @@ class Model:
             scheme = fsdp_scheme or QuantScheme(name="fp32")
             self._fsdp_scheme = scheme
             self._gather = fsdp_lib.make_gather(
-                data_axes, scheme, fsdp_sync)
+                data_axes, scheme, fsdp_sync,
+                use_pallas=fsdp_use_pallas)
             self._slot_meta = []
             self._slot_len = []
             world = dp

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import exp_levels, ternary_levels, uniform_levels
+from repro.core import code_dtype, exp_levels, ternary_levels, uniform_levels
 from repro.kernels import ops, ref
 
 
@@ -40,7 +40,7 @@ def test_dequantize_kernel_matches_oracle(nb, bs, lname, levels):
     key = jax.random.PRNGKey(1)
     nlev = levels.shape[0]
     codes = jax.random.randint(key, (nb, bs), -(nlev - 1), nlev).astype(
-        jnp.int16)
+        code_dtype(nlev))
     norms = jax.random.uniform(jax.random.PRNGKey(2), (nb,)) + 0.1
     d1 = ops.dequantize_op(codes, norms, levels, use_pallas=True)
     d2 = ref.dequantize_ref(codes, norms, levels)

@@ -3,8 +3,13 @@ symbol stream, bit width, and length; packed size is exactly
 ceil(n*k/32) words."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline image: seeded-random fallback
+    from proptest_compat import given, settings
+    from proptest_compat import strategies as st
 
 from repro.core import packing
 

@@ -6,8 +6,13 @@ import numpy as np
 import pytest
 import scipy.integrate
 import scipy.stats
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline image: seeded-random fallback
+    from proptest_compat import given, settings
+    from proptest_compat import strategies as st
 
 from repro.core import (
     TruncNormStats,
