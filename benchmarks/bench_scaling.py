@@ -8,11 +8,12 @@ import numpy as np
 
 from repro.core.quantize import quantize as _quantize_fn
 from repro.core.schemes import QuantScheme
-from .common import emit
+from .common import emit, write_results
 
 
 def run(d: int = 65536):
     g = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 0.01
+    metrics: dict = {}
     for m in ("alq", "qsgdinf", "trn"):
         scheme = QuantScheme(name=m, bits=3, bucket_size=2048)
         state = scheme.init_state()
@@ -32,6 +33,13 @@ def run(d: int = 65536):
                 jax.random.split(jax.random.PRNGKey(1), 8))))
             emit(f"table2/{m}/M={M}", 0.0,
                  f"agg_err={err:.4e};per_worker_x_M={err*M:.4e}")
+            metrics[f"{m}/M={M}"] = {"agg_err": err,
+                                     "per_worker_x_M": err * M}
+    write_results("scaling",
+                  {"d": d, "bits": 3, "bucket_size": 2048,
+                   "schemes": ["alq", "qsgdinf", "trn"],
+                   "workers": [4, 16, 32]},
+                  metrics)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.core.quantize import quantize as _quantize_fn
 from repro.core.schemes import QuantScheme
-from .common import emit
+from .common import emit, write_results
 
 
 def run(d: int = 262144):
@@ -17,6 +17,7 @@ def run(d: int = 262144):
     scheme = QuantScheme(name="alq", bits=3, bucket_size=4096)
     lv = scheme.init_state().levels
     wire = packing.wire_bits_for(scheme.num_levels)
+    metrics: dict = {"wire": {}, "variance": {}}
 
     for M in (16, 32, 256, 512):
         bytes_bcast = M * d * wire / 8
@@ -25,6 +26,11 @@ def run(d: int = 262144):
         emit(f"twophase/wire/M={M}", 0.0,
              f"broadcast_B={bytes_bcast:.3e};two_phase_B={bytes_2ph:.3e};"
              f"fp32_ring_B={bytes_fp32_ring:.3e}")
+        metrics["wire"][f"M={M}"] = {
+            "broadcast_bytes": bytes_bcast,
+            "two_phase_bytes": bytes_2ph,
+            "fp32_ring_bytes": bytes_fp32_ring,
+        }
 
     # variance compounding: Q2(mean(Q(g_i))) vs mean(Q(g_i)).
     # Re-quantizing on the same 3-bit grid forfeits the 1/M averaging
@@ -52,6 +58,18 @@ def run(d: int = 262144):
          f"(x{float(e3.mean()/e1.mean()):.1f});"
          f"requant8bit_err={float(e8.mean()):.4e}"
          f"(x{float(e8.mean()/e1.mean()):.2f})")
+    metrics["variance"] = {
+        "one_phase_err": float(e1.mean()),
+        "requant3bit_err": float(e3.mean()),
+        "requant8bit_err": float(e8.mean()),
+        "requant3bit_blowup": float(e3.mean() / e1.mean()),
+        "requant8bit_blowup": float(e8.mean() / e1.mean()),
+    }
+    write_results(
+        "twophase",
+        {"d": d, "scheme": scheme.name, "bits": scheme.bits,
+         "bucket_size": scheme.bucket_size, "variance_M": M},
+        metrics)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,9 @@ evaluation protocol, Sec. 5: "simulate training with 4 GPUs on a single
 GPU by quantizing and dequantizing the gradient from 4 mini-batches")."""
 from __future__ import annotations
 
+import datetime
+import json
+import os
 import time
 
 import jax
@@ -19,6 +22,8 @@ from repro.models import Model
 from repro.train.data import DataConfig, Pipeline
 from repro.train.optim import OptimConfig, apply_updates, init_opt_state
 
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
 ROWS = []
 
 
@@ -26,6 +31,38 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_results(name: str, config: dict, metrics: dict) -> str:
+    """Persist one benchmark run as ``BENCH_<name>.json`` at the repo
+    root so successive runs leave a machine-readable perf trajectory.
+
+    Schema: ``{name, config, metrics, timestamp}`` — ``config`` is the
+    benchmark's parameterization, ``metrics`` its measured numbers (any
+    JSON-serializable nesting; np/jnp scalars are coerced).
+    """
+    def coerce(x):
+        if isinstance(x, dict):
+            return {k: coerce(v) for k, v in x.items()}
+        if isinstance(x, (list, tuple)):
+            return [coerce(v) for v in x]
+        if isinstance(x, (np.generic, jnp.ndarray, np.ndarray)):
+            arr = np.asarray(x)
+            return arr.item() if arr.ndim == 0 else arr.tolist()
+        return x
+
+    payload = {
+        "name": name,
+        "config": coerce(config),
+        "metrics": coerce(metrics),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}", flush=True)
+    return path
 
 
 def timeit(fn, *args, warmup=1, iters=3):

@@ -46,5 +46,15 @@ from .coding import (
     huffman_code_lengths,
     level_probabilities,
 )
-from .packing import pack, pack_signed, packed_words, unpack, unpack_signed, wire_bits_for
+from .packing import (
+    norm_words,
+    pack,
+    pack_norms,
+    pack_signed,
+    packed_words,
+    unpack,
+    unpack_norms,
+    unpack_signed,
+    wire_bits_for,
+)
 from .schemes import ALL_SCHEMES, QuantScheme, SchemeState, default_update_schedule

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 
 
@@ -73,6 +74,56 @@ def bias_codes(signed_codes: jnp.ndarray, num_levels: int) -> jnp.ndarray:
 
 def unbias_codes(symbols: jnp.ndarray, num_levels: int) -> jnp.ndarray:
     return symbols.astype(jnp.int32) - (num_levels - 1)
+
+
+NORM_DTYPES = ("float32", "float16")
+
+
+def norm_words(nb: int, norm_dtype: str = "float32") -> int:
+    """uint32 words occupied by ``nb`` packed bucket norms."""
+    if norm_dtype == "float32":
+        return nb
+    if norm_dtype == "float16":
+        return -(-nb // 2)
+    raise ValueError(f"unknown norm_dtype {norm_dtype!r}; known: {NORM_DTYPES}")
+
+
+def pack_norms(norms: jnp.ndarray, norm_dtype: str = "float32") -> jnp.ndarray:
+    """Bucket norms -> dense uint32 word stream for the wire.
+
+    ``float32`` is a pure bitcast (1 word/norm).  ``float16`` halves the
+    norm side-channel: norms are rounded to fp16 (gradient bucket norms
+    sit far inside fp16's range; the ~2^-11 relative step is below
+    quantization noise at every practical width) and packed two per word,
+    little-end first.
+    """
+    norms = norms.reshape(-1)
+    if norm_dtype == "float32":
+        return jax.lax.bitcast_convert_type(norms.astype(jnp.float32),
+                                            jnp.uint32)
+    if norm_dtype == "float16":
+        h = jax.lax.bitcast_convert_type(norms.astype(jnp.float16),
+                                         jnp.uint16).astype(jnp.uint32)
+        nb = h.shape[0]
+        if nb % 2:
+            h = jnp.concatenate([h, jnp.zeros((1,), jnp.uint32)])
+        pair = h.reshape(-1, 2)
+        return pair[:, 0] | (pair[:, 1] << jnp.uint32(16))
+    raise ValueError(f"unknown norm_dtype {norm_dtype!r}; known: {NORM_DTYPES}")
+
+
+def unpack_norms(words: jnp.ndarray, nb: int,
+                 norm_dtype: str = "float32") -> jnp.ndarray:
+    """Inverse of ``pack_norms``: recover ``nb`` fp32 bucket norms
+    (fp16 norms are upcast; the fp16 rounding itself is lossy by design)."""
+    if norm_dtype == "float32":
+        return jax.lax.bitcast_convert_type(words, jnp.float32)[:nb]
+    if norm_dtype == "float16":
+        lo = (words & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        hi = (words >> jnp.uint32(16)).astype(jnp.uint16)
+        h = jnp.stack([lo, hi], axis=-1).reshape(-1)[:nb]
+        return jax.lax.bitcast_convert_type(h, jnp.float16).astype(jnp.float32)
+    raise ValueError(f"unknown norm_dtype {norm_dtype!r}; known: {NORM_DTYPES}")
 
 
 def pack_signed(signed_codes: jnp.ndarray, num_levels: int) -> jnp.ndarray:

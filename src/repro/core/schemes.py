@@ -47,10 +47,15 @@ class QuantScheme:
     max_stat_components: int = 64     # suff.-stat subsample (App. K)
     alq_sweeps: int = 10
     amq_gd_steps: int = 100
+    norm_dtype: str = "float32"       # bucket norms on the wire (f32|f16)
 
     def __post_init__(self):
         if self.name not in ALL_SCHEMES:
             raise ValueError(f"unknown scheme {self.name!r}; known: {ALL_SCHEMES}")
+        from .packing import NORM_DTYPES
+        if self.norm_dtype not in NORM_DTYPES:
+            raise ValueError(
+                f"unknown norm_dtype {self.norm_dtype!r}; known: {NORM_DTYPES}")
 
     @property
     def quantized(self) -> bool:

@@ -1,16 +1,25 @@
 """Distributed communication engine: quantized collectives + FSDP.
 
-``sync``   ENCODE -> collective -> DECODE (Algorithm 1, lines 6-9) in two
-           bit-packed wire modes, plus the sufficient-statistics gather
-           and the schedule-gated level update.
-``fsdp``   Flat-parameter substrate: per-slot flatten metadata, chunk
-           planning, and the all-gather forward / quantized
-           reduce-scatter backward used by big-arch configs.
+``sync``      ENCODE -> collective -> DECODE (Algorithm 1, lines 6-9) in
+              two bit-packed wire modes, plus the sufficient-statistics
+              gather and the schedule-gated level update.
+``fsdp``      Flat-parameter substrate: per-slot flatten metadata, chunk
+              planning, and the all-gather forward / quantized
+              reduce-scatter backward used by big-arch configs.
+``transport`` Injectable collective transport the wire modes run on —
+              mesh axes in production, vmap axes (plus payload
+              drop/weighting) for the ``repro.sim`` cluster simulator.
 """
-from . import fsdp, sync  # noqa: F401
+from . import fsdp, sync, transport  # noqa: F401
 from .sync import (  # noqa: F401
     SyncMetrics,
     gather_stats,
     maybe_update_levels,
     quantized_allreduce,
+)
+from .transport import (  # noqa: F401
+    MaskedTransport,
+    MeshTransport,
+    Transport,
+    make_transport,
 )

@@ -43,6 +43,8 @@ from repro.core.levels import uniform_levels
 from repro.core.quantize import NORM_LINF, pad_to_buckets
 from repro.core.schemes import QuantScheme, SchemeState
 from repro.core.stats import TruncNormStats, merge_stats, stats_from_moments
+from repro.dist import transport as transport_lib
+from repro.dist.transport import Transport, make_transport
 from repro.kernels import ops
 from repro.kernels.quantize import DEFAULT_BUCKET_TILE
 
@@ -54,27 +56,20 @@ TWO_PHASE_BITS = 8
 
 
 class SyncMetrics(NamedTuple):
-    comm_bits_per_coord: jnp.ndarray
+    """Per-step wire accounting, split by direction so asymmetric modes
+    (two_phase: cheap reduce hop, 9-bit broadcast hop) are visible to
+    cost models (``repro.sim``) instead of one aggregate number."""
+
+    comm_bits_per_coord: jnp.ndarray       # total = reduce + broadcast
     quant_error: jnp.ndarray  # local ||Q(g) - g||^2 (own encode)
+    reduce_bits_per_coord: jnp.ndarray     # toward-aggregate hop (phase 1)
+    broadcast_bits_per_coord: jnp.ndarray  # from-aggregate hop (phase 2 /
+    #                                        the broadcast-all gather)
 
 
-# ---------------------------------------------------------------------------
-# axis helpers (static under shard_map)
-# ---------------------------------------------------------------------------
-
-def _axes_size(axes) -> int:
-    n = 1
-    for ax in axes:
-        n *= jax.lax.axis_size(ax)
-    return n
-
-
-def _axes_rank(axes):
-    """Row-major global rank over the (ordered) named axes."""
-    r = jnp.zeros((), jnp.int32)
-    for ax in axes:
-        r = r * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-    return r
+# axis helpers (one implementation, in transport; fsdp imports them here)
+_axes_size = transport_lib.axes_size
+_axes_rank = transport_lib.axes_rank
 
 
 def _bucketize(flat: jnp.ndarray, bucket_size: int,
@@ -117,7 +112,7 @@ def _decode_streams(words, norms, n_per_stream, levels, use_pallas):
 # wire modes
 # ---------------------------------------------------------------------------
 
-def _allreduce_all_gather(flat, scheme, levels, key, axes, use_pallas):
+def _allreduce_all_gather(flat, scheme, levels, key, transport, use_pallas):
     d = flat.shape[0]
     L = levels.shape[0]
     vb = _bucketize(flat, scheme.bucket_size)
@@ -126,28 +121,28 @@ def _allreduce_all_gather(flat, scheme, levels, key, axes, use_pallas):
 
     codes, norms = _encode(vb, levels, key, scheme.norm_type, use_pallas)
     words = packing.pack_signed(codes, L)
+    nwords = packing.pack_norms(norms, scheme.norm_dtype)
 
-    if axes:
-        gw = jax.lax.all_gather(words, axes)   # (M, W) uint32
-        gn = jax.lax.all_gather(norms, axes)   # (M, nb) f32
-    else:
-        gw, gn = words[None], norms[None]
-    M = gw.shape[0]
+    gw = transport.all_gather(words)    # (M, W) uint32
+    gnw = transport.all_gather(nwords)  # (M, norm_words) uint32
+    gn = jax.vmap(
+        lambda w: packing.unpack_norms(w, nb, scheme.norm_dtype))(gnw)
 
     per_worker = _decode_streams(gw, gn, n, levels, use_pallas)
-    out = per_worker.mean(0)[:d]
+    out = transport.mean_workers(per_worker)[:d]
 
-    rank = _axes_rank(axes) if axes else jnp.zeros((), jnp.int32)
-    own = jnp.take(per_worker, rank, axis=0)[:d]
+    own = jnp.take(per_worker, transport.rank(), axis=0)[:d]
     qerr = jnp.sum((own - flat) ** 2)
-    bits = (words.size + norms.size) * 32.0 / d
-    return out, SyncMetrics(jnp.float32(bits), qerr)
+    # the single gather IS the broadcast-all hop (paper Sec. 5)
+    bits = jnp.float32((words.size + nwords.size) * 32.0 / d)
+    return out, SyncMetrics(bits, qerr, jnp.float32(0.0), bits)
 
 
-def _allreduce_two_phase(flat, scheme, levels, key, axes, use_pallas):
+def _allreduce_two_phase(flat, scheme, levels, key, transport, use_pallas):
     d = flat.shape[0]
     L = levels.shape[0]
-    M = _axes_size(axes) if axes else 1
+    M = transport.size()
+    nd = scheme.norm_dtype
     # nb_p % (M * tile) == 0: whole buckets per shard AND tile-aligned
     # encode/decode on both the full and the per-shard bucket counts.
     vb = _bucketize(flat, scheme.bucket_size, group=M * DEFAULT_BUCKET_TILE)
@@ -161,14 +156,14 @@ def _allreduce_two_phase(flat, scheme, levels, key, axes, use_pallas):
         packing.pack_signed(
             jax.lax.slice_in_dim(codes, j * shard_nb, (j + 1) * shard_nb), L)
         for j in range(M)])                               # (M, Ws)
-    if M > 1:
-        rw = jax.lax.all_to_all(words, axes, 0, 0, tiled=True)
-        rn = jax.lax.all_to_all(norms.reshape(M, shard_nb), axes, 0, 0,
-                                tiled=True)
-    else:
-        rw, rn = words, norms.reshape(M, shard_nb)
-    shard_mean = _decode_streams(rw, rn, shard_n, levels, use_pallas)
-    shard_mean = shard_mean.mean(0).reshape(shard_nb, bs)
+    nwords = jax.vmap(lambda x: packing.pack_norms(x, nd))(
+        norms.reshape(M, shard_nb))                       # (M, Wn)
+    rw = transport.all_to_all(words)
+    rnw = transport.all_to_all(nwords)
+    rn = jax.vmap(lambda w: packing.unpack_norms(w, shard_nb, nd))(rnw)
+    shard_per_worker = _decode_streams(rw, rn, shard_n, levels, use_pallas)
+    shard_mean = transport.mean_workers(shard_per_worker)
+    shard_mean = shard_mean.reshape(shard_nb, bs)
 
     # ---- phase 2: re-quantize the aggregate, broadcast compressed ----
     lv2 = uniform_levels(TWO_PHASE_BITS)
@@ -176,19 +171,20 @@ def _allreduce_two_phase(flat, scheme, levels, key, axes, use_pallas):
     c2, n2 = _encode(shard_mean, lv2, jax.random.fold_in(key, 0x2FA5E),
                      NORM_LINF, use_pallas)
     w2 = packing.pack_signed(c2, L2)
-    if axes:
-        gw2 = jax.lax.all_gather(w2, axes)     # (M, Ws2)
-        gn2 = jax.lax.all_gather(n2, axes)     # (M, shard_nb)
-    else:
-        gw2, gn2 = w2[None], n2[None]
+    n2w = packing.pack_norms(n2, nd)
+    gw2 = transport.all_gather(w2)      # (M, Ws2)
+    gn2w = transport.all_gather(n2w)    # (M, Wn2)
+    gn2 = jax.vmap(lambda w: packing.unpack_norms(w, shard_nb, nd))(gn2w)
     out = _decode_streams(gw2, gn2, shard_n, lv2, use_pallas)
     out = out.reshape(-1)[:d]
 
     # local decode of own phase-1 contribution for the error metric
     own = ops.dequantize_op(codes, norms, levels, use_pallas=use_pallas)
     qerr = jnp.sum((own.reshape(-1)[:d] - flat) ** 2)
-    bits = (words.size + norms.size + w2.size + n2.size) * 32.0 / d
-    return out, SyncMetrics(jnp.float32(bits), qerr)
+    bits_reduce = jnp.float32((words.size + nwords.size) * 32.0 / d)
+    bits_bcast = jnp.float32((w2.size + n2w.size) * 32.0 / d)
+    return out, SyncMetrics(bits_reduce + bits_bcast, qerr,
+                            bits_reduce, bits_bcast)
 
 
 def quantized_allreduce(
@@ -200,6 +196,7 @@ def quantized_allreduce(
     axes=(),
     mode: str = "all_gather",
     use_pallas: bool = True,
+    transport: Transport | None = None,
 ) -> tuple[jnp.ndarray, SyncMetrics]:
     """ENCODE -> collective -> DECODE -> average; replicated output.
 
@@ -209,27 +206,35 @@ def quantized_allreduce(
       key: PRNG key, REPLICATED across workers — worker-distinct
         randomness is derived by folding in the global rank.
       axes: named mesh axes to synchronize over (may be empty: M=1).
+        The axes may equally be ``jax.vmap`` axis names — that is how
+        ``repro.sim`` runs M logical workers on one host through this
+        exact code path.
       mode: 'fp32' | 'all_gather' | 'two_phase'.
+      transport: collective transport override (``dist.transport``);
+        defaults to plain named-axis collectives over ``axes``.  The
+        simulator injects a ``MaskedTransport`` here to drop per-worker
+        payloads (worker dropout) without touching the wire-mode code.
 
     Returns (aggregate mean, SyncMetrics); the aggregate is bit-identical
     on every worker in all modes.
     """
     flat = flat.reshape(-1)
     axes = tuple(axes)
+    if transport is None:
+        transport = make_transport(axes)
     if mode == "fp32" or not scheme.quantized:
-        if axes:
-            out = jax.lax.psum(flat, axes) / _axes_size(axes)
-        else:
-            out = flat
-        return out, SyncMetrics(jnp.float32(32.0), jnp.float32(0.0))
+        out = transport.mean_psum(flat)
+        return out, SyncMetrics(jnp.float32(32.0), jnp.float32(0.0),
+                                jnp.float32(32.0), jnp.float32(0.0))
 
     levels = state.levels
-    key = jax.random.fold_in(key, _axes_rank(axes)) if axes else key
+    if transport.axes:
+        key = jax.random.fold_in(key, transport.rank())
     if mode == "all_gather":
-        return _allreduce_all_gather(flat, scheme, levels, key, axes,
+        return _allreduce_all_gather(flat, scheme, levels, key, transport,
                                      use_pallas)
     if mode == "two_phase":
-        return _allreduce_two_phase(flat, scheme, levels, key, axes,
+        return _allreduce_two_phase(flat, scheme, levels, key, transport,
                                     use_pallas)
     raise ValueError(f"unknown sync mode {mode!r}")
 

@@ -1,0 +1,143 @@
+"""Injectable collective transport for the quantized sync engine.
+
+``dist.sync``'s wire modes are written against this small protocol
+instead of calling ``jax.lax`` collectives directly, so the same
+ENCODE -> collective -> DECODE code path runs in three settings:
+
+  * inside ``shard_map`` over mesh axes (production: ``MeshTransport``);
+  * inside ``jax.vmap(..., axis_name=...)`` — vmap axes are first-class
+    named axes in jax, so ``MeshTransport`` doubles as the single-host
+    M-logical-worker transport the ``repro.sim`` cluster simulator uses;
+  * with per-worker payload *weighting* injected on top
+    (``MaskedTransport``), which is how the simulator models worker
+    dropout: a dropped worker's payload never arrives and is excluded
+    from the aggregate (the cluster cost model likewise treats the
+    worker as absent for the step).
+
+A transport also owns the cross-worker averaging rule
+(``mean_workers``): the plain transports average uniformly; the masked
+transport renormalizes over surviving workers, so every wire mode gets
+dropout support without knowing about it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def axes_size(axes) -> int:
+    """Total worker count over the (ordered) named axes (static)."""
+    n = 1
+    for ax in axes:
+        n *= jax.lax.axis_size(ax)
+    return n
+
+
+def axes_rank(axes):
+    """Row-major global rank over the (ordered) named axes."""
+    r = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        r = r * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return r
+
+
+class Transport:
+    """Collectives over an ordered tuple of named axes.
+
+    The base class implements everything with ``jax.lax`` primitives;
+    named axes may be mesh axes (under ``shard_map``) or vmap axes.
+    """
+
+    def __init__(self, axes=()):
+        self.axes = tuple(axes)
+
+    # ---- topology facts -------------------------------------------------
+
+    def size(self) -> int:
+        return axes_size(self.axes)
+
+    def rank(self):
+        return axes_rank(self.axes)
+
+    # ---- collectives ----------------------------------------------------
+
+    def all_gather(self, x):
+        """(…) -> (M, …) with worker w's payload at row w."""
+        if not self.axes:
+            return x[None]
+        return jax.lax.all_gather(x, self.axes)
+
+    def all_to_all(self, x):
+        """(M, …) -> (M, …): row j goes to worker j; row i of the result
+        is what worker i sent to this worker (tiled exchange over axis 0)."""
+        if not self.axes or self.size() == 1:
+            return x
+        return jax.lax.all_to_all(x, self.axes, 0, 0, tiled=True)
+
+    def psum(self, x):
+        if not self.axes:
+            return x
+        return jax.lax.psum(x, self.axes)
+
+    # ---- aggregation rule ----------------------------------------------
+
+    def weights(self) -> jnp.ndarray:
+        """(M,) convex weights used to average per-worker payloads."""
+        M = self.size()
+        return jnp.full((M,), 1.0 / M, jnp.float32)
+
+    def mean_workers(self, stacked: jnp.ndarray) -> jnp.ndarray:
+        """Mean over the leading (worker) axis of gathered payloads.
+
+        The uniform case MUST stay ``stacked.mean(0)`` (sum then divide):
+        the packed-vs-unpacked bit-exactness contract of the wire format
+        pins this exact float reduction order.
+        """
+        return stacked.mean(0)
+
+    def mean_psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        """fp32 mean-allreduce of per-worker local values."""
+        if not self.axes:
+            return x
+        return jax.lax.psum(x, self.axes) / self.size()
+
+
+class MeshTransport(Transport):
+    """Production transport: ``jax.lax`` collectives over named axes
+    (mesh axes inside ``shard_map``, or vmap axes with ``axis_name``)."""
+
+
+class MaskedTransport(Transport):
+    """Wraps named-axis collectives with an injected per-worker weight
+    vector — the simulator's dropout / heterogeneity hook.
+
+    ``active`` is an (M,) float vector (1.0 = payload arrives, 0.0 =
+    worker absent); weights renormalize over the survivors, so the
+    aggregate is the mean over workers whose payloads were delivered.
+    ``active`` must be replicated across workers (it is the *cluster's*
+    state for the step, not a per-worker view).
+    """
+
+    def __init__(self, axes, active: jnp.ndarray):
+        super().__init__(axes)
+        self.active = jnp.asarray(active, jnp.float32)
+
+    def weights(self) -> jnp.ndarray:
+        total = jnp.maximum(jnp.sum(self.active), 1.0)
+        return self.active / total
+
+    def mean_workers(self, stacked: jnp.ndarray) -> jnp.ndarray:
+        return jnp.tensordot(self.weights(), stacked, axes=(0, 0))
+
+    def mean_psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        if not self.axes:
+            return x
+        return jax.lax.psum(
+            x * jnp.take(self.weights(), self.rank()), self.axes)
+
+
+def make_transport(axes=(), active=None) -> Transport:
+    """Default transport factory used by ``quantized_allreduce``."""
+    if active is not None:
+        return MaskedTransport(axes, active)
+    return MeshTransport(axes)

@@ -1,0 +1,22 @@
+"""repro.sim — a cluster simulator for quantized data-parallel training.
+
+Runs M logical workers on one host against pluggable aggregation
+topologies (flat allreduce via the real ``repro.dist`` collectives under
+vmap, a QSGD-style parameter server, a per-hop-re-quantizing ring) and
+heterogeneous cluster models (bandwidth spread, stragglers, dropout),
+emitting per-step JSON trajectories of loss, wire bytes, simulated
+wall-clock, and gradient-statistics drift.
+
+    python -m repro.sim --scenario paper_mlp
+
+See docs/simulator.md for topologies, the cost model, and the JSON
+schema.
+"""
+from .cluster import ClusterConfig, sample_step, step_time_ms  # noqa: F401
+from .scenario import SCENARIOS, Scenario, register, run_scenario  # noqa: F401
+from .topology import (  # noqa: F401
+    SIM_AXIS,
+    TOPOLOGIES,
+    TopologyResult,
+    run_topology,
+)

@@ -1,0 +1,114 @@
+"""Worker heterogeneity models and the simulated wall-clock cost model.
+
+The simulator is bulk-synchronous: a step's simulated time is the
+makespan of its slowest surviving worker plus whatever the aggregation
+point serializes.  All randomness (straggler draws, dropout draws,
+compute jitter) is host-side numpy, seeded from ``(seed, step)`` with a
+``SeedSequence`` — the same scenario config always produces the same
+trajectory, bit for bit.
+
+Cost model (formulas also in docs/simulator.md):
+
+    compute_w = compute_ms * jitter_w * (straggler_scale if straggling)
+    comm_w    = sent_bytes_w / bw_w + recv_bytes_w / bw_w
+    t_step    = max over ACTIVE workers (compute_w + comm_w)
+                + server_bytes / server_bw          (param_server only)
+                + hops * latency_ms
+
+with per-worker full-duplex link bandwidth ``bw_w`` (heterogeneous when
+``bandwidth_gbps`` is a tuple) and one shared server link.  Dropped
+workers spend no time (they are absent for the step) and their payloads
+are excluded from the aggregate by the topology layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """One logical cluster: link speeds, stragglers, dropout."""
+
+    num_workers: int = 4
+    # per-worker link bandwidth; scalar = homogeneous, tuple = one entry
+    # per worker (cycled if shorter than num_workers)
+    bandwidth_gbps: float | tuple = 10.0
+    server_bandwidth_gbps: float = 40.0   # param-server ingress+egress link
+    compute_ms: float = 10.0              # base per-step gradient compute
+    compute_jitter: float = 0.0           # lognormal sigma on compute time
+    straggler_prob: float = 0.0           # P[worker straggles this step]
+    straggler_scale: float = 1.0          # compute multiplier when straggling
+    dropout_prob: float = 0.0             # P[worker absent this step]
+    latency_ms: float = 0.05              # per serialized hop
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if self.straggler_scale < 1.0:
+            raise ValueError("straggler_scale must be >= 1 (it multiplies "
+                             "compute time)")
+
+
+def worker_bandwidths(cfg: ClusterConfig) -> np.ndarray:
+    """(M,) per-worker link bandwidth in bytes/ms."""
+    bw = cfg.bandwidth_gbps
+    if np.isscalar(bw):
+        per = np.full(cfg.num_workers, float(bw))
+    else:
+        per = np.array([float(bw[i % len(bw)])
+                        for i in range(cfg.num_workers)])
+    # 1 Gb/s = 1e9 bits/s = 1.25e5 bytes/ms
+    return per * 1.25e5
+
+
+def _rng(cfg: ClusterConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, 0xC1A5]))
+
+
+def sample_step(cfg: ClusterConfig, step: int):
+    """Deterministic per-step draw -> (compute_ms (M,), active (M,) f32).
+
+    Uses one uniform per worker per effect so the draws are COUPLED
+    across config changes: raising ``straggler_prob`` or
+    ``straggler_scale`` at a fixed seed can only slow workers down,
+    which is what makes the monotonicity property testable.
+
+    Worker 0 never drops: the cluster always has at least one survivor.
+    """
+    M = cfg.num_workers
+    rng = _rng(cfg, step)
+    u_straggle = rng.random(M)
+    u_drop = rng.random(M)
+    jitter = (np.exp(cfg.compute_jitter * rng.standard_normal(M))
+              if cfg.compute_jitter > 0 else np.ones(M))
+
+    straggling = u_straggle < cfg.straggler_prob
+    factor = np.where(straggling, cfg.straggler_scale, 1.0)
+    compute = cfg.compute_ms * jitter * factor
+
+    active = (u_drop >= cfg.dropout_prob).astype(np.float32)
+    active[0] = 1.0
+    return compute, active
+
+
+def step_time_ms(
+    cfg: ClusterConfig,
+    compute_ms: np.ndarray,
+    active: np.ndarray,
+    sent_bytes: np.ndarray,
+    recv_bytes: np.ndarray,
+    server_bytes: float,
+    hops: int,
+) -> float:
+    """Simulated wall-clock of one bulk-synchronous step (formula above)."""
+    bw = worker_bandwidths(cfg)
+    comm = (np.asarray(sent_bytes) + np.asarray(recv_bytes)) / bw
+    per_worker = np.asarray(compute_ms) + comm
+    mask = np.asarray(active) > 0
+    makespan = float(per_worker[mask].max()) if mask.any() else 0.0
+    server = float(server_bytes) / (cfg.server_bandwidth_gbps * 1.25e5)
+    return makespan + server + float(hops) * cfg.latency_ms

@@ -1,0 +1,338 @@
+"""Aggregation topologies for the cluster simulator.
+
+Three ways to turn M per-worker gradients into an aggregate, all behind
+one interface (``run_topology``) and all speaking the bit-packed wire
+format of ``core/packing.py``:
+
+``allreduce``     The production path, verbatim: M logical workers run
+    ``repro.dist.sync.quantized_allreduce`` under ``jax.vmap`` with a
+    named axis (vmap axes are real named axes, so the collectives inside
+    the wire modes execute unmodified).  Worker dropout is injected via
+    ``dist.transport.MaskedTransport``.
+
+``param_server``  The classic QSGD worker/server split: every worker
+    ENCODEs on the scheme grid and ships its payload up; the server
+    DECODEs the surviving payloads, averages, optionally RE-quantizes
+    the aggregate on a fixed uniform/L-inf grid (``server_bits``), and
+    broadcasts one payload down.  With ``server_bits=None`` the server
+    broadcasts raw fp32 — in that case a homogeneous cluster is
+    bit-identical to ``allreduce`` in ``all_gather`` mode, because both
+    reduce to "decode all M streams, average" with the same per-worker
+    encode keys (tested).
+
+``ring``          Chunked ring allreduce with PER-HOP re-quantization:
+    the gradient splits into M whole-bucket chunks; M-1 reduce hops pass
+    accumulating partial sums around the ring, each hop re-encoded on
+    the scheme grid, then M-1 gather hops circulate the finished chunks,
+    again re-encoded per hop.  The injected noise therefore compounds
+    with ring distance — the error-vs-topology effect the paper's flat
+    broadcast scheme avoids, made measurable (``quant_error`` records
+    each worker's injected noise; scenario trajectories record the
+    end-to-end aggregate error).
+
+All three are deterministic functions of (grads, scheme state, key):
+worker-distinct randomness comes from folding worker rank / hop index
+into the replicated key, exactly like the production collectives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.levels import uniform_levels
+from repro.core.quantize import NORM_LINF
+from repro.core.schemes import QuantScheme, SchemeState
+from repro.dist import sync
+from repro.dist.transport import MaskedTransport
+from repro.kernels import ops
+from repro.kernels.quantize import DEFAULT_BUCKET_TILE
+
+# the vmap axis name the simulator runs its logical workers on
+SIM_AXIS = "sim_workers"
+
+TOPOLOGIES = ("allreduce", "param_server", "ring")
+
+
+class TopologyResult(NamedTuple):
+    """What one synchronization round produced, per worker.
+
+    ``aggregate`` is each worker's *view* of the aggregate — identical
+    rows for allreduce/param_server, per-worker divergent for ring
+    (downstream copies of a chunk pass through more re-quantizations).
+    Byte counts feed the cluster cost model (``sim.cluster``).
+    """
+
+    aggregate: jnp.ndarray         # (M, d)
+    sent_bytes: jnp.ndarray        # (M,) transmitted by worker w
+    recv_bytes: jnp.ndarray        # (M,) received by worker w
+    server_bytes: jnp.ndarray      # () through the server (0 if none)
+    hops: jnp.ndarray              # () latency-serialized hops
+    quant_error: jnp.ndarray       # (M,) own injected quantization noise
+
+
+def _payload_bytes(n: int, nb: int, num_levels: int, norm_dtype: str) -> float:
+    """Wire bytes of one packed (codes + norms) payload of n coords."""
+    wb = packing.wire_bits_for(num_levels)
+    return 4.0 * (packing.packed_words(n, wb)
+                  + packing.norm_words(nb, norm_dtype))
+
+
+def _wire_norms(norms: jnp.ndarray, norm_dtype: str) -> jnp.ndarray:
+    """Round a (…, nb) norm vector through its packed wire representation
+    so the value path matches the byte accounting (fp32 is a lossless
+    bitcast and skips the round trip)."""
+    if norm_dtype == "float32":
+        return norms
+    nb = norms.shape[-1]
+    flat = norms.reshape(-1, nb)
+    out = jax.vmap(lambda x: packing.unpack_norms(
+        packing.pack_norms(x, norm_dtype), nb, norm_dtype))(flat)
+    return out.reshape(norms.shape)
+
+
+# ---------------------------------------------------------------------------
+# allreduce: the production collective under vmap
+# ---------------------------------------------------------------------------
+
+def _topo_allreduce(grads, scheme, state, key, active, *, mode, use_pallas):
+    """``active=None`` (statically homogeneous) uses the default
+    ``MeshTransport`` — the production ``stacked.mean(0)`` reduction
+    order, bit for bit; a mask switches to the renormalizing
+    ``MaskedTransport``."""
+    M, d = grads.shape
+
+    def worker(g):
+        transport = (MaskedTransport((SIM_AXIS,), active)
+                     if active is not None else None)
+        return sync.quantized_allreduce(
+            g, scheme, state, key, axes=(SIM_AXIS,), mode=mode,
+            use_pallas=use_pallas, transport=transport)
+
+    out, m = jax.vmap(worker, axis_name=SIM_AXIS)(grads)
+
+    # byte accounting from the per-direction metrics (bits are per
+    # original coordinate; padding is already folded in by sync)
+    scale = d / 8.0
+    if mode == "two_phase":
+        # phase 1 all-to-all ships each peer its shard; phase 2 gathers
+        # the re-quantized shard payload from every worker
+        p1 = m.reduce_bits_per_coord * scale
+        p2 = m.broadcast_bits_per_coord * scale
+        sent = (M - 1) / M * p1 + (M - 1) * p2
+        recv = (M - 1) / M * p1 + (jnp.sum(p2) - p2)
+        hops = 2
+    elif mode == "fp32" or not scheme.quantized:
+        # cost as a bandwidth-optimal fp32 ring (2(M-1)/M · 4d each way)
+        vol = 2 * (M - 1) / M * 4.0 * d
+        sent = jnp.full((M,), vol, jnp.float32)
+        recv = sent
+        hops = 2
+    else:
+        # broadcast-all gather: each worker ships its payload to M-1 peers
+        p = m.broadcast_bits_per_coord * scale
+        sent = (M - 1) * p
+        recv = jnp.sum(p) - p
+        hops = 1
+    return TopologyResult(out, sent, recv, jnp.float32(0.0),
+                          jnp.int32(hops), m.quant_error)
+
+
+# ---------------------------------------------------------------------------
+# param_server: encode up, decode/average/(re-quantize), broadcast down
+# ---------------------------------------------------------------------------
+
+def _topo_param_server(grads, scheme, state, key, active,
+                       *, server_bits, use_pallas):
+    M, d = grads.shape
+    levels = state.levels
+    L = levels.shape[0]
+    nd = scheme.norm_dtype
+
+    vb = jax.vmap(lambda g: sync._bucketize(g, scheme.bucket_size))(grads)
+    _, nb, bs = vb.shape
+    n = nb * bs
+
+    # ---- uplink: per-worker encode with the production key schedule ----
+    keys = jax.vmap(lambda w: jax.random.fold_in(key, w))(jnp.arange(M))
+    codes, norms = jax.vmap(
+        lambda v, k: sync._encode(v, levels, k, scheme.norm_type,
+                                  use_pallas))(vb, keys)
+    norms = _wire_norms(norms, nd)
+    words = jax.vmap(lambda c: packing.pack_signed(c, L))(codes)
+
+    # ---- server: decode surviving payloads, weighted average ----
+    # (active=None -> .mean(0): the same float reduction order as the
+    # production allreduce, preserving bit-exactness with it)
+    per_worker = sync._decode_streams(words, norms, n, levels, use_pallas)
+    if active is None:
+        agg = per_worker.mean(0)
+    else:
+        w = active / jnp.maximum(jnp.sum(active), 1.0)
+        agg = jnp.tensordot(w, per_worker, axes=(0, 0))  # (n,)
+
+    up = jnp.full((M,), _payload_bytes(n, nb, L, nd), jnp.float32)
+    own = per_worker[:, :d]
+    qerr = jnp.sum((own - grads) ** 2, axis=1)
+
+    # ---- downlink: one payload, every worker decodes the same bytes ----
+    if server_bits is None:
+        out = jnp.broadcast_to(agg[None, :d], (M, d))
+        down = jnp.float32(4.0 * d)                 # raw fp32 broadcast
+    else:
+        lv2 = uniform_levels(server_bits)
+        c2, n2 = sync._encode(agg.reshape(nb, bs), lv2,
+                              jax.random.fold_in(key, M + 0x5E2F),
+                              NORM_LINF, use_pallas)
+        dec = ops.dequantize_op(c2, _wire_norms(n2, nd), lv2,
+                                use_pallas=use_pallas)
+        out = jnp.broadcast_to(dec.reshape(-1)[None, :d], (M, d))
+        down = jnp.float32(_payload_bytes(n, nb, lv2.shape[0], nd))
+
+    sent = up
+    recv = jnp.full((M,), down, jnp.float32)
+    server_bytes = jnp.sum(up) + M * down
+    return TopologyResult(out, sent, recv, server_bytes,
+                          jnp.int32(2), qerr)
+
+
+# ---------------------------------------------------------------------------
+# ring: chunked reduce-scatter + all-gather, re-quantized per hop
+# ---------------------------------------------------------------------------
+
+def _ring_quantize(x, levels, key, norm_type, norm_dtype, use_pallas):
+    """Q(x) per worker: x is (M, shard_nb, bs); returns the decoded
+    values that travel one hop (byte size is static, accounted by the
+    caller; norms take the packed wire round trip)."""
+    def one(v, k):
+        u = jax.random.uniform(k, v.shape, jnp.float32)
+        codes, norms = ops.quantize_op(v, u, levels, norm_type=norm_type,
+                                       use_pallas=use_pallas)
+        return ops.dequantize_op(codes, _wire_norms(norms, norm_dtype),
+                                 levels, use_pallas=use_pallas)
+    M = x.shape[0]
+    keys = jax.vmap(lambda w: jax.random.fold_in(key, w))(jnp.arange(M))
+    return jax.vmap(one)(x, keys)
+
+
+def _topo_ring(grads, scheme, state, key, active, *, use_pallas):
+    M, d = grads.shape
+    levels = state.levels
+    L = levels.shape[0]
+
+    # Dropout simplification: a dropped worker's *contribution* is
+    # zeroed and the sum renormalizes over survivors, but the ring stays
+    # closed (no re-formation is simulated) — the cluster layer treats
+    # the worker as absent, so its relay traffic is not charged.
+    contrib = grads if active is None else grads * active[:, None]
+    vb = jax.vmap(lambda g: sync._bucketize(
+        g, scheme.bucket_size, group=M * DEFAULT_BUCKET_TILE))(contrib)
+    _, nb, bs = vb.shape
+    shard_nb = nb // M
+    shard_n = shard_nb * bs
+    # (M, M, shard_nb, bs): worker w's local chunks
+    local = vb.reshape(M, M, shard_nb, bs)
+    widx = jnp.arange(M)
+
+    if not scheme.quantized:
+        def qhop(x, hop_key):
+            return x
+    else:
+        def qhop(x, hop_key):
+            return _ring_quantize(x, levels, hop_key, scheme.norm_type,
+                                  scheme.norm_dtype, use_pallas)
+
+    qerr = jnp.zeros((M,), jnp.float32)
+
+    # ---- reduce-scatter: M-1 hops of accumulating partial sums ----
+    # at hop h worker w sends its partial of chunk (w - h) mod M to w+1
+    acc = local[widx, widx]                       # (M, shard_nb, bs)
+    for h in range(M - 1):
+        q = qhop(acc, jax.random.fold_in(key, 0x11A0 + h))
+        qerr = qerr + jnp.sum((q - acc) ** 2, axis=(1, 2))
+        incoming = jnp.roll(q, 1, axis=0)         # from worker w-1
+        cidx = (widx - 1 - h) % M                 # chunk arriving at w
+        acc = incoming + local[widx, cidx]
+
+    # worker w now holds the full sum of chunk (w + 1) mod M
+    if active is None:
+        weight = 1.0 / M
+    else:
+        weight = 1.0 / jnp.maximum(jnp.sum(active), 1.0)
+    acc = acc * weight                            # sum -> masked mean
+
+    # ---- all-gather: M-1 hops circulating finished chunks ----
+    views = jnp.zeros((M, M, shard_nb, bs), acc.dtype)
+    own_chunk = (widx + 1) % M
+    views = views.at[widx, own_chunk].set(acc)
+    cur = acc
+    for h in range(M - 1):
+        q = qhop(cur, jax.random.fold_in(key, 0x22B0 + h))
+        qerr = qerr + jnp.sum((q - cur) ** 2, axis=(1, 2))
+        cur = jnp.roll(q, 1, axis=0)              # from worker w-1
+        cidx = (widx - h) % M                     # chunk now held by w
+        views = views.at[widx, cidx].set(cur)
+
+    out = views.reshape(M, nb * bs)[:, :d]
+
+    chunk_bytes = _payload_bytes(shard_n, shard_nb, L, scheme.norm_dtype)
+    if not scheme.quantized:
+        chunk_bytes = 4.0 * shard_n
+    vol = jnp.full((M,), 2.0 * (M - 1) * chunk_bytes, jnp.float32)
+    return TopologyResult(out, vol, vol, jnp.float32(0.0),
+                          jnp.int32(2 * (M - 1)), qerr)
+
+
+# ---------------------------------------------------------------------------
+# the one interface the scenario engine calls
+# ---------------------------------------------------------------------------
+
+def run_topology(
+    name: str,
+    grads: jnp.ndarray,
+    scheme: QuantScheme,
+    state: SchemeState,
+    key: jax.Array,
+    *,
+    active: jnp.ndarray | None = None,
+    sync_mode: str = "all_gather",
+    server_bits: int | None = sync.TWO_PHASE_BITS,
+    use_pallas: bool = False,
+) -> TopologyResult:
+    """Synchronize (M, d) per-worker gradients over a named topology.
+
+    Args:
+      name: 'allreduce' | 'param_server' | 'ring'.
+      grads: (M, d) stacked local gradients (M logical workers).
+      scheme / state: quantization method + adaptive state, as in
+        ``quantized_allreduce``.
+      key: replicated PRNG key; worker/hop-distinct randomness is folded
+        in internally, matching the production key schedule.
+      active: (M,) float mask, 1.0 = worker's payload arrives; ``None``
+        means statically homogeneous, which keeps the exact production
+        float reduction order (``mean(0)``).  Dropped workers are
+        excluded from the aggregate (renormalized mean over survivors).
+      sync_mode: wire mode for the allreduce topology (fp32 schemes use
+        exact fp32 everywhere regardless).
+      server_bits: param_server downlink grid width; ``None`` broadcasts
+        raw fp32 (bit-identical to allreduce on a homogeneous cluster).
+    """
+    grads = jnp.asarray(grads)
+    if active is not None:
+        active = jnp.asarray(active, jnp.float32)
+    if name == "allreduce":
+        return _topo_allreduce(grads, scheme, state, key, active,
+                               mode=sync_mode, use_pallas=use_pallas)
+    if name == "param_server":
+        if not scheme.quantized:
+            return _topo_allreduce(grads, scheme, state, key, active,
+                                   mode="fp32", use_pallas=use_pallas)
+        return _topo_param_server(grads, scheme, state, key, active,
+                                  server_bits=server_bits,
+                                  use_pallas=use_pallas)
+    if name == "ring":
+        return _topo_ring(grads, scheme, state, key, active,
+                          use_pallas=use_pallas)
+    raise ValueError(f"unknown topology {name!r}; known: {TOPOLOGIES}")

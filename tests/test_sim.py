@@ -1,0 +1,198 @@
+"""Simulator coverage (docs/simulator.md):
+
+* topology agreement: with a homogeneous cluster and no server
+  re-quantization, param_server and allreduce produce BIT-identical
+  aggregates (same encode keys, same decode+average math);
+* ring per-hop re-quantization measurably compounds error vs the flat
+  broadcast scheme, and collapses to the exact mean for fp32;
+* dropout: masked topologies renormalize over surviving payloads;
+* the cluster cost model is deterministic and straggler
+  knobs reduce simulated throughput monotonically;
+* ``run_scenario`` under a fixed seed emits a bit-identical trajectory.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schemes import QuantScheme
+from repro.sim import (
+    ClusterConfig,
+    Scenario,
+    run_scenario,
+    run_topology,
+    sample_step,
+    step_time_ms,
+)
+
+KEY = jax.random.PRNGKey(7)
+M, D = 4, 6000
+
+
+@pytest.fixture(scope="module")
+def grads():
+    return jax.random.normal(jax.random.PRNGKey(0), (M, D)) * 0.01
+
+
+@pytest.fixture(scope="module")
+def scheme():
+    return QuantScheme(name="alq", bits=3, bucket_size=256)
+
+
+def test_param_server_matches_allreduce_bit_exactly(grads, scheme):
+    """Homogeneous cluster + raw-fp32 downlink: the server's
+    decode-all/average is the same computation as the broadcast-all
+    allreduce, down to the encode PRNG keys."""
+    state = scheme.init_state()
+    ar = run_topology("allreduce", grads, scheme, state, KEY,
+                      use_pallas=False)
+    ps = run_topology("param_server", grads, scheme, state, KEY,
+                      server_bits=None, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ar.aggregate),
+                                  np.asarray(ps.aggregate))
+    # allreduce views are replicated
+    assert (np.asarray(ar.aggregate) == np.asarray(ar.aggregate)[0]).all()
+
+
+def test_param_server_matches_allreduce_nonpow2_workers(scheme):
+    """M=6: 1/M is inexact in fp32, so this only holds because the
+    homogeneous (active=None) path keeps the production mean(0)
+    reduction order in BOTH topologies."""
+    g6 = jax.random.normal(jax.random.PRNGKey(2), (6, D)) * 0.01
+    state = scheme.init_state()
+    ar = run_topology("allreduce", g6, scheme, state, KEY,
+                      use_pallas=False)
+    ps = run_topology("param_server", g6, scheme, state, KEY,
+                      server_bits=None, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ar.aggregate),
+                                  np.asarray(ps.aggregate))
+
+
+def test_param_server_requant_adds_bounded_noise(grads, scheme):
+    state = scheme.init_state()
+    ar = run_topology("allreduce", grads, scheme, state, KEY,
+                      use_pallas=False)
+    ps8 = run_topology("param_server", grads, scheme, state, KEY,
+                       server_bits=8, use_pallas=False)
+    exact = np.asarray(grads).mean(0)
+    e_ar = ((np.asarray(ar.aggregate)[0] - exact) ** 2).sum()
+    e_ps = ((np.asarray(ps8.aggregate)[0] - exact) ** 2).sum()
+    # the 8-bit L-inf downlink grid sits far below phase-1 noise
+    assert e_ps < 1.5 * e_ar
+
+
+def test_ring_requant_compounds_error(grads, scheme):
+    state = scheme.init_state()
+    ar = run_topology("allreduce", grads, scheme, state, KEY,
+                      use_pallas=False)
+    ring = run_topology("ring", grads, scheme, state, KEY,
+                        use_pallas=False)
+    exact = np.asarray(grads).mean(0)
+    e_ar = ((np.asarray(ar.aggregate)[0] - exact) ** 2).sum()
+    e_ring = ((np.asarray(ring.aggregate) - exact) ** 2).sum(axis=1)
+    # every worker's ring view is strictly worse than the flat scheme:
+    # partial sums were re-rounded at every hop
+    assert (e_ring > e_ar).all()
+    assert int(ring.hops) == 2 * (M - 1)
+
+
+def test_ring_fp32_is_exact_mean(grads):
+    fp = QuantScheme(name="fp32")
+    res = run_topology("ring", grads, fp, fp.init_state(), KEY,
+                       use_pallas=False)
+    exact = np.asarray(grads).mean(0)
+    np.testing.assert_allclose(np.asarray(res.aggregate),
+                               np.broadcast_to(exact, (M, D)),
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_dropout_renormalizes_over_survivors(grads, scheme):
+    state = scheme.init_state()
+    active = jnp.array([1.0, 1.0, 0.0, 1.0])
+    ar = run_topology("allreduce", grads, scheme, state, KEY,
+                      active=active, use_pallas=False)
+    ps = run_topology("param_server", grads, scheme, state, KEY,
+                      active=active, server_bits=None, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ar.aggregate),
+                                  np.asarray(ps.aggregate))
+    # fp32 ring under the same mask: exact masked mean
+    fp = QuantScheme(name="fp32")
+    ring = run_topology("ring", grads, fp, fp.init_state(), KEY,
+                        active=active, use_pallas=False)
+    masked = np.asarray((grads * active[:, None]).sum(0) / 3.0)
+    np.testing.assert_allclose(np.asarray(ring.aggregate)[0], masked,
+                               rtol=1e-5, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# cluster cost model
+# ---------------------------------------------------------------------------
+
+def _total_time(cfg: ClusterConfig, steps: int = 25) -> float:
+    sent = np.full(cfg.num_workers, 1e6)
+    recv = np.full(cfg.num_workers, 1e6)
+    total = 0.0
+    for t in range(steps):
+        compute, active = sample_step(cfg, t)
+        total += step_time_ms(cfg, compute, active, sent, recv, 0.0, 2)
+    return total
+
+
+def test_straggler_scale_monotonically_reduces_throughput():
+    base = ClusterConfig(num_workers=8, straggler_prob=0.3, seed=3)
+    times = [_total_time(dataclasses.replace(base, straggler_scale=s))
+             for s in (1.0, 2.0, 4.0, 16.0)]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    assert times[-1] > times[0]  # stragglers actually bite
+
+
+def test_straggler_prob_monotonically_reduces_throughput():
+    base = ClusterConfig(num_workers=8, straggler_scale=8.0, seed=3)
+    times = [_total_time(dataclasses.replace(base, straggler_prob=p))
+             for p in (0.0, 0.2, 0.5, 1.0)]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    assert times[-1] > times[0]
+
+
+def test_cluster_draws_deterministic():
+    cfg = ClusterConfig(num_workers=4, straggler_prob=0.5,
+                        dropout_prob=0.3, compute_jitter=0.2, seed=11)
+    for t in (0, 1, 17):
+        c1, a1 = sample_step(cfg, t)
+        c2, a2 = sample_step(cfg, t)
+        np.testing.assert_array_equal(c1, c2)
+        np.testing.assert_array_equal(a1, a2)
+        assert a1[0] == 1.0  # worker 0 never drops
+
+
+def test_hetero_bandwidth_slowest_link_gates():
+    fast = ClusterConfig(num_workers=4, bandwidth_gbps=10.0)
+    slow1 = ClusterConfig(num_workers=4,
+                          bandwidth_gbps=(1.0, 10.0, 10.0, 10.0))
+    assert _total_time(slow1) > _total_time(fast)
+
+
+# ---------------------------------------------------------------------------
+# scenario engine: fixed seed -> bit-identical trajectory
+# ---------------------------------------------------------------------------
+
+def test_scenario_trajectory_deterministic():
+    scn = Scenario(
+        name="tiny", schemes=("qsgdinf",), topologies=("allreduce",),
+        steps=2, seq_len=16, batch_per_worker=1,
+        cluster=ClusterConfig(num_workers=2, straggler_prob=0.5,
+                              straggler_scale=3.0))
+    r1 = run_scenario(scn)
+    r2 = run_scenario(scn)
+    assert json.dumps(r1, sort_keys=True) == json.dumps(r2, sort_keys=True)
+    cell = r1["cells"][0]
+    assert len(cell["steps"]) == 2
+    s0 = cell["steps"][0]
+    for k in ("loss", "sim_time_ms", "wire_sent_bytes", "agg_err",
+              "drift_mu", "psi", "levels"):
+        assert k in s0
+    assert s0["sim_time_ms"] > 0
+    assert all(b > 0 for b in s0["wire_sent_bytes"])
