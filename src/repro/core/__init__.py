@@ -38,6 +38,19 @@ from .stats import (
     partial_moment2,
 )
 from .adapt import alq_gd_update, alq_update, amq_gradient, amq_objective, amq_update, psi_gradient
+from .codec import (
+    GradientCodec,
+    MixedWidthCodec,
+    UniformCodec,
+    WirePayload,
+    WirePlan,
+    assign_mixed_widths,
+    codec_for_scheme,
+    make_codec,
+    mixed_widths_from_gradient,
+    requant_codec,
+    resample_levels,
+)
 from .coding import (
     code_length_bound,
     entropy_bits,

@@ -97,12 +97,30 @@ class QuantScheme:
         # uniform or exponential init; CD converges from both).
         return levels_lib.uniform_levels(self.bits)
 
+    @property
+    def wire_bits(self) -> int:
+        """Fixed-width wire bits per magnitude+sign symbol."""
+        from .packing import wire_bits_for
+        return wire_bits_for(self.num_levels)
+
     def init_state(self) -> "SchemeState":
         return SchemeState(
             levels=self.init_levels(),
             multiplier=jnp.asarray(0.5, jnp.float32),
             num_updates=jnp.asarray(0, jnp.int32),
+            # until the first fit, the achievable wire cost is the
+            # fixed-width cost (no occupancy statistics yet)
+            entropy_bits=jnp.asarray(float(self.wire_bits), jnp.float32),
         )
+
+    def _entropy_bits(self, levels: jnp.ndarray,
+                      stats: TruncNormStats) -> jnp.ndarray:
+        """Achievable entropy-coded wire bits per coordinate at these
+        levels under the fitted distribution: H(L) plus one sign bit
+        whenever the magnitude symbol is nonzero (App. D accounting)."""
+        from .coding import entropy_bits, level_probabilities
+        probs = level_probabilities(levels, stats)
+        return (entropy_bits(probs) + 1.0 - probs[0]).astype(jnp.float32)
 
     def update_state(self, state: "SchemeState", stats: TruncNormStats) -> "SchemeState":
         """One level-adaptation step from fresh sufficient statistics."""
@@ -113,12 +131,14 @@ class QuantScheme:
                 state.multiplier, stats, bits=self.bits, steps=self.amq_gd_steps
             )
             lv = levels_lib.multiplier_to_levels(p, self.bits)
-            return SchemeState(lv, p, state.num_updates + 1)
+            return SchemeState(lv, p, state.num_updates + 1,
+                               self._entropy_bits(lv, stats))
         if self._base.startswith("alq_gd"):
             lv = adapt.alq_gd_update(state.levels, stats)
         else:
             lv = adapt.alq_update(state.levels, stats, sweeps=self.alq_sweeps)
-        return SchemeState(lv, state.multiplier, state.num_updates + 1)
+        return SchemeState(lv, state.multiplier, state.num_updates + 1,
+                           self._entropy_bits(lv, stats))
 
 
 class SchemeState(NamedTuple):
@@ -127,6 +147,11 @@ class SchemeState(NamedTuple):
     levels: jnp.ndarray
     multiplier: jnp.ndarray
     num_updates: jnp.ndarray
+    # achievable entropy-coded wire bits/coord of the current grid, fit
+    # from the stats of the last level update (H(L) + sign bits); starts
+    # at the fixed-width cost.  Reported next to the actual fixed-width
+    # cost in SyncMetrics.entropy_bits_per_coord.
+    entropy_bits: jnp.ndarray = 0.0
 
 
 def default_update_schedule(total_steps: int) -> tuple[int, ...]:

@@ -1,7 +1,7 @@
 """Distributed communication engine: quantized collectives + FSDP.
 
 ``sync``      ENCODE -> collective -> DECODE (Algorithm 1, lines 6-9) in
-              two bit-packed wire modes, plus the sufficient-statistics
+              two packed wire modes, plus the sufficient-statistics
               gather and the schedule-gated level update.
 ``fsdp``      Flat-parameter substrate: per-slot flatten metadata, chunk
               planning, and the all-gather forward / quantized
@@ -9,8 +9,24 @@
 ``transport`` Injectable collective transport the wire modes run on —
               mesh axes in production, vmap axes (plus payload
               drop/weighting) for the ``repro.sim`` cluster simulator.
+
+The payload layout itself lives in ``repro.core.codec``; its public API
+is re-exported here because the codec IS the wire contract of this
+package.
 """
 from . import fsdp, sync, transport  # noqa: F401
+from repro.core.codec import (  # noqa: F401
+    GradientCodec,
+    MixedWidthCodec,
+    UniformCodec,
+    WirePayload,
+    WirePlan,
+    assign_mixed_widths,
+    codec_for_scheme,
+    make_codec,
+    mixed_widths_from_gradient,
+    requant_codec,
+)
 from .sync import (  # noqa: F401
     SyncMetrics,
     gather_stats,

@@ -4,9 +4,9 @@ Parameters of one layer slot are stored as ONE flat, zero-padded fp32
 vector sharded over the data axes.  The forward materializes a slot with
 a tiled ``all_gather``; the backward of that gather is a *quantized
 reduce-scatter* (``custom_vjp``): each worker ENCODEs its local cotangent
-on the scheme's grid and ships each peer only that peer's shard as packed
-words — so FSDP training moves ``b``-bit gradients in BOTH directions of
-the wire instead of fp32.
+through the configured ``GradientCodec`` and ships each peer only that
+peer's shard as a packed ``WirePayload`` — so FSDP training moves
+``b``-bit gradients in BOTH directions of the wire instead of fp32.
 
 Layout invariants (enforced by ``padded_flat_len`` / ``chunk_plan``):
 
@@ -16,7 +16,9 @@ Layout invariants (enforced by ``padded_flat_len`` / ``chunk_plan``):
 so every shard holds whole buckets (the encode never straddles a shard
 boundary) and the backward can run in ``k`` rounds — round c covers
 slice ``[c*ppr, (c+1)*ppr)`` of every shard's buckets — letting the
-encode of round c+1 overlap the all-to-all of round c.
+encode of round c+1 overlap the all-to-all of round c.  (A
+``MixedWidthCodec`` backward runs in one round: its per-bucket layout is
+planned over the whole shard.)
 
 Zero-padding is an exact fixed point of ENCODE/DECODE (sign 0 -> code 0),
 so padded master parameters never drift.
@@ -29,9 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import packing
+from repro.core.codec import GradientCodec, codec_for_scheme
 from repro.core.schemes import QuantScheme
-from .sync import _axes_rank, _axes_size, _decode_streams, _encode
+from repro.dist import transport as transport_lib
 
 # ---------------------------------------------------------------------------
 # flatten metadata
@@ -115,45 +117,42 @@ def _rounds_for(shard_nb: int) -> int:
     return 1
 
 
-def _quantized_reduce_scatter(g, levels, key, *, axes, bucket_size,
-                              norm_type, use_pallas):
+def _quantized_reduce_scatter(g, levels, key, *, axes,
+                              codec: GradientCodec, use_pallas):
     """(Lp,) per-worker cotangent -> (Lp/M,) shard of the worker MEAN.
 
     Runs in rounds over sub-slices of every shard so the ENCODE of round
     c+1 is independent of (and can overlap) the all-to-all of round c.
-    Wire per worker: ceil(Lp*b/32) words + Lp/bucket norms, total — the
-    bandwidth-optimal reduce-scatter volume.
+    The wire carries the codec's packed payload (words + norm words) —
+    the bandwidth-optimal reduce-scatter volume at the codec's widths.
     """
-    M = _axes_size(axes)
+    transport = transport_lib.make_transport(axes)
+    M = transport.size()
     # worker-distinct rounding randomness even when the caller passes a
     # replicated key: correlated rounding across workers would forfeit
     # the 1/M variance averaging of the mean
-    key = jax.random.fold_in(key, _axes_rank(axes))
-    L = levels.shape[0]
-    nb = g.shape[0] // bucket_size
+    key = jax.random.fold_in(key, transport.rank())
+    bs = codec.bucket_size
+    nb = g.shape[0] // bs
     shard_nb = nb // M
-    k = _rounds_for(shard_nb)
+    # mixed-width layouts are planned per whole shard: one round
+    k = _rounds_for(shard_nb) if codec.chunkable else 1
     ppr = shard_nb // k  # buckets per shard per round
-    gb = g.reshape(M, shard_nb, bucket_size)
+    gb = g.reshape(M, shard_nb, bs)
 
     pieces = []
     for c in range(k):
         sub = jax.lax.slice_in_dim(gb, c * ppr, (c + 1) * ppr, axis=1)
-        vb = sub.reshape(M * ppr, bucket_size)
-        codes, norms = _encode(vb, levels, jax.random.fold_in(key, c),
-                               norm_type, use_pallas)
-        words = jnp.stack([
-            packing.pack_signed(
-                jax.lax.slice_in_dim(codes, j * ppr, (j + 1) * ppr), L)
-            for j in range(M)])                       # (M, Ws)
-        if M > 1:
-            words = jax.lax.all_to_all(words, axes, 0, 0, tiled=True)
-            rn = jax.lax.all_to_all(norms.reshape(M, ppr), axes, 0, 0,
-                                    tiled=True)
-        else:
-            rn = norms.reshape(M, ppr)
-        vals = _decode_streams(words, rn, ppr * bucket_size, levels,
-                               use_pallas)             # (M, ppr*bs)
+        vb = sub.reshape(M * ppr, bs)
+        plan = codec.plan_buckets(M * ppr, shards=M)
+        payload = codec.encode(vb, levels, jax.random.fold_in(key, c),
+                               plan, use_pallas=use_pallas)
+        if M == 1:
+            payload = jax.tree.map(lambda a: a[None], payload)
+        received = jax.tree.map(transport.all_to_all, payload)
+        vals = codec.decode(received, levels, plan,
+                            shard=transport.rank(),
+                            use_pallas=use_pallas)     # (M, ppr*bs)
         pieces.append(vals.mean(0))
     return jnp.concatenate(pieces)
 
@@ -164,14 +163,16 @@ def _float0_zeros(x):
 
 
 def make_gather(data_axes, scheme: QuantScheme, fsdp_sync: str = "quantized",
-                *, use_pallas: bool = False):
+                *, use_pallas: bool = False,
+                codec: GradientCodec | None = None):
     """Returns ``gather(shard, levels, key) -> full`` for one flat slot.
 
     Forward: tiled all_gather of the param shard over ``data_axes``.
     Backward: reduce-scatter of the cotangent to the worker MEAN —
-    quantized (packed words + norms on the wire) when
+    quantized (the codec's packed payload on the wire) when
     ``fsdp_sync == 'quantized'`` and the scheme quantizes, else fp32
-    ``psum_scatter``.
+    ``psum_scatter``.  ``codec`` defaults to the scheme's uniform codec;
+    a ``MixedWidthCodec`` moves per-bucket mixed widths instead.
 
     ``use_pallas`` defaults to False: on CPU the interpret-mode kernels
     materialize every grid block (see launch/dryrun.py); flip it on for
@@ -179,6 +180,8 @@ def make_gather(data_axes, scheme: QuantScheme, fsdp_sync: str = "quantized",
     """
     axes = tuple(data_axes)
     quantized = fsdp_sync == "quantized" and scheme.quantized
+    if codec is None:
+        codec = codec_for_scheme(scheme)
 
     def gather(shard, levels, key):
         @jax.custom_vjp
@@ -192,10 +195,10 @@ def make_gather(data_axes, scheme: QuantScheme, fsdp_sync: str = "quantized",
             lv, k = res
             if quantized:
                 ds = _quantized_reduce_scatter(
-                    g, lv, k, axes=axes, bucket_size=scheme.bucket_size,
-                    norm_type=scheme.norm_type, use_pallas=use_pallas)
+                    g, lv, k, axes=axes, codec=codec,
+                    use_pallas=use_pallas)
             else:
-                M = _axes_size(axes)
+                M = transport_lib.axes_size(axes)
                 ds = jax.lax.psum_scatter(
                     g, axes, scatter_dimension=0, tiled=True) / M
             return ds, jnp.zeros_like(lv), _float0_zeros(k)

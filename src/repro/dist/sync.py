@@ -1,27 +1,30 @@
 """Quantized gradient synchronization (Algorithm 1, lines 2-9).
 
 Everything here runs INSIDE ``shard_map``: collectives are expressed over
-named mesh axes (``axes``), and what travels over the interconnect is the
-bit-packed wire format of ``core/packing.py`` — ``ceil(n*b/32)`` uint32
-words plus one fp32 norm per bucket — never dequantized fp32.
+named mesh axes (``axes``), and what travels over the interconnect is a
+``core.codec.WirePayload`` — dense uint32 words of packed level symbols
+plus packed bucket norms — never dequantized fp32.  The payload layout
+(including per-bucket mixed widths) is owned entirely by the
+``GradientCodec``; this module only sequences ENCODE -> collective ->
+DECODE -> average over a ``Transport``.
 
 Wire modes
 ----------
-``all_gather``  Every worker ENCODEs its local gradient (fused Pallas
-    kernel), packs the signed level indices into a dense word stream, and
-    all-gathers (words, norms).  One decode+average pass over the M*nb
-    gathered buckets yields the aggregate; since every worker decodes the
-    same gathered bytes, the result is bit-identical everywhere (the
+``all_gather``  Every worker ENCODEs its local gradient, and the packed
+    payload is all-gathered.  One fused decode+average pass over the M
+    gathered streams yields the aggregate; since every worker decodes
+    the same gathered bytes, the result is bit-identical everywhere (the
     paper's broadcast-all scheme, Sec. 5).
 
 ``two_phase``   The reduce direction is compressed with the scheme's own
-    grid and moved as an all-to-all (a true quantized reduce-scatter:
-    each worker ships each peer only that peer's shard).  Each worker
-    then RE-quantizes its shard of the aggregate on a fixed 8-bit
-    uniform/L-inf grid — fine enough that the second rounding does not
-    forfeit the 1/M variance averaging (see benchmarks/bench_twophase) —
-    and the packed result is all-gathered.  Total wire is ~(b + 8/M + 9)
-    bits/coord instead of the broadcast scheme's M*b.
+    grid and moved as an all-to-all of the codec's *sharded* payload (a
+    true quantized reduce-scatter: each worker ships each peer only that
+    peer's shard).  Each worker then RE-quantizes its shard of the
+    aggregate on a fixed 8-bit uniform/L-inf grid — fine enough that the
+    second rounding does not forfeit the 1/M variance averaging (see
+    benchmarks/bench_twophase) — and the packed result is all-gathered.
+    Total wire is ~(b + 8/M + 9) bits/coord instead of the broadcast
+    scheme's M*b.
 
 ``fp32``        Plain psum mean (SuperSGD / debugging baseline).
 
@@ -38,15 +41,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
+from repro.core.codec import GradientCodec, codec_for_scheme, requant_codec
 from repro.core.levels import uniform_levels
-from repro.core.quantize import NORM_LINF, pad_to_buckets
 from repro.core.schemes import QuantScheme, SchemeState
 from repro.core.stats import TruncNormStats, merge_stats, stats_from_moments
-from repro.dist import transport as transport_lib
 from repro.dist.transport import Transport, make_transport
 from repro.kernels import ops
-from repro.kernels.quantize import DEFAULT_BUCKET_TILE
 
 # Phase-2 grid of the two_phase mode: 8-bit uniform levels under L-inf
 # bucket normalization (QSGDinf at 8 bits).  L-inf spreads the aggregate's
@@ -65,124 +65,69 @@ class SyncMetrics(NamedTuple):
     reduce_bits_per_coord: jnp.ndarray     # toward-aggregate hop (phase 1)
     broadcast_bits_per_coord: jnp.ndarray  # from-aggregate hop (phase 2 /
     #                                        the broadcast-all gather)
-
-
-# axis helpers (one implementation, in transport; fsdp imports them here)
-_axes_size = transport_lib.axes_size
-_axes_rank = transport_lib.axes_rank
-
-
-def _bucketize(flat: jnp.ndarray, bucket_size: int,
-               group: int = DEFAULT_BUCKET_TILE) -> jnp.ndarray:
-    """(d,) -> (nb_p, bucket_size) zero-padded; nb_p group-aligned.
-
-    Zero buckets are exact fixed points of ENCODE/DECODE (norm 0, code 0),
-    so padding never leaks into the aggregate.
-    """
-    vb = pad_to_buckets(flat, bucket_size)
-    nb = vb.shape[0]
-    nb_p = -(-nb // group) * group
-    if nb_p != nb:
-        vb = jnp.concatenate(
-            [vb, jnp.zeros((nb_p - nb, bucket_size), vb.dtype)])
-    return vb
-
-
-def _encode(vb, levels, key, norm_type, use_pallas):
-    u = jax.random.uniform(key, vb.shape, jnp.float32)
-    return ops.quantize_op(vb, u, levels, norm_type=norm_type,
-                           use_pallas=use_pallas)
-
-
-def _decode_streams(words, norms, n_per_stream, levels, use_pallas):
-    """(M, W) packed words + (M, nb) norms -> (M, n_per_stream) values.
-
-    One fused dequantize pass over all M*nb gathered buckets.
-    """
-    L = levels.shape[0]
-    M, nb = norms.shape
-    bs = n_per_stream // nb
-    sym = jax.vmap(lambda w: packing.unpack_signed(w, n_per_stream, L))(words)
-    vals = ops.dequantize_op(sym.reshape(M * nb, bs), norms.reshape(-1),
-                             levels, use_pallas=use_pallas)
-    return vals.reshape(M, n_per_stream)
+    entropy_bits_per_coord: jnp.ndarray = 0.0  # achievable entropy-coded
+    #   cost of the CURRENT grid: H(L) + Pr(sym != 0) sign bits, fit at
+    #   the last level update (``SchemeState.entropy_bits``); fixed-width
+    #   wire bits until the first update.
 
 
 # ---------------------------------------------------------------------------
 # wire modes
 # ---------------------------------------------------------------------------
 
-def _allreduce_all_gather(flat, scheme, levels, key, transport, use_pallas):
+def _allreduce_all_gather(flat, codec, levels, key, transport, use_pallas):
     d = flat.shape[0]
-    L = levels.shape[0]
-    vb = _bucketize(flat, scheme.bucket_size)
-    nb, bs = vb.shape
-    n = nb * bs
+    plan = codec.plan(d)
+    vb = codec.bucketize(flat, plan)
+    payload = codec.encode(vb, levels, key, plan, use_pallas=use_pallas)
 
-    codes, norms = _encode(vb, levels, key, scheme.norm_type, use_pallas)
-    words = packing.pack_signed(codes, L)
-    nwords = packing.pack_norms(norms, scheme.norm_dtype)
-
-    gw = transport.all_gather(words)    # (M, W) uint32
-    gnw = transport.all_gather(nwords)  # (M, norm_words) uint32
-    gn = jax.vmap(
-        lambda w: packing.unpack_norms(w, nb, scheme.norm_dtype))(gnw)
-
-    per_worker = _decode_streams(gw, gn, n, levels, use_pallas)
+    gathered = jax.tree.map(transport.all_gather, payload)   # (M, ...)
+    per_worker = codec.decode(gathered, levels, plan,
+                              use_pallas=use_pallas)          # (M, n)
     out = transport.mean_workers(per_worker)[:d]
 
     own = jnp.take(per_worker, transport.rank(), axis=0)[:d]
     qerr = jnp.sum((own - flat) ** 2)
     # the single gather IS the broadcast-all hop (paper Sec. 5)
-    bits = jnp.float32((words.size + nwords.size) * 32.0 / d)
+    bits = jnp.float32(plan.bits_per_coord)
     return out, SyncMetrics(bits, qerr, jnp.float32(0.0), bits)
 
 
-def _allreduce_two_phase(flat, scheme, levels, key, transport, use_pallas):
+def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
     d = flat.shape[0]
-    L = levels.shape[0]
     M = transport.size()
-    nd = scheme.norm_dtype
-    # nb_p % (M * tile) == 0: whole buckets per shard AND tile-aligned
-    # encode/decode on both the full and the per-shard bucket counts.
-    vb = _bucketize(flat, scheme.bucket_size, group=M * DEFAULT_BUCKET_TILE)
-    nb, bs = vb.shape
-    shard_nb = nb // M
-    shard_n = shard_nb * bs
+    plan = codec.plan(d, shards=M)
 
     # ---- phase 1: quantized reduce-scatter (scheme grid) ----
-    codes, norms = _encode(vb, levels, key, scheme.norm_type, use_pallas)
-    words = jnp.stack([
-        packing.pack_signed(
-            jax.lax.slice_in_dim(codes, j * shard_nb, (j + 1) * shard_nb), L)
-        for j in range(M)])                               # (M, Ws)
-    nwords = jax.vmap(lambda x: packing.pack_norms(x, nd))(
-        norms.reshape(M, shard_nb))                       # (M, Wn)
-    rw = transport.all_to_all(words)
-    rnw = transport.all_to_all(nwords)
-    rn = jax.vmap(lambda w: packing.unpack_norms(w, shard_nb, nd))(rnw)
-    shard_per_worker = _decode_streams(rw, rn, shard_n, levels, use_pallas)
+    vb = codec.bucketize(flat, plan)
+    payload = codec.encode(vb, levels, key, plan, use_pallas=use_pallas)
+    if M == 1:  # unsharded payload is 1-D; the wire still sees one row
+        payload = jax.tree.map(lambda a: a[None], payload)
+    received = jax.tree.map(transport.all_to_all, payload)
+    shard_per_worker = codec.decode(received, levels, plan,
+                                    shard=transport.rank(),
+                                    use_pallas=use_pallas)   # (M, shard_n)
     shard_mean = transport.mean_workers(shard_per_worker)
-    shard_mean = shard_mean.reshape(shard_nb, bs)
+    shard_mean = shard_mean.reshape(plan.shard_nb, plan.bucket_size)
 
     # ---- phase 2: re-quantize the aggregate, broadcast compressed ----
+    codec2 = requant_codec(codec, TWO_PHASE_BITS)
     lv2 = uniform_levels(TWO_PHASE_BITS)
-    L2 = lv2.shape[0]
-    c2, n2 = _encode(shard_mean, lv2, jax.random.fold_in(key, 0x2FA5E),
-                     NORM_LINF, use_pallas)
-    w2 = packing.pack_signed(c2, L2)
-    n2w = packing.pack_norms(n2, nd)
-    gw2 = transport.all_gather(w2)      # (M, Ws2)
-    gn2w = transport.all_gather(n2w)    # (M, Wn2)
-    gn2 = jax.vmap(lambda w: packing.unpack_norms(w, shard_nb, nd))(gn2w)
-    out = _decode_streams(gw2, gn2, shard_n, lv2, use_pallas)
+    plan2 = codec2.plan_buckets(plan.shard_nb)
+    pay2 = codec2.encode(shard_mean, lv2,
+                         jax.random.fold_in(key, 0x2FA5E), plan2,
+                         use_pallas=use_pallas)
+    g2 = jax.tree.map(transport.all_gather, pay2)
+    out = codec2.decode(g2, lv2, plan2, use_pallas=use_pallas)
     out = out.reshape(-1)[:d]
 
-    # local decode of own phase-1 contribution for the error metric
-    own = ops.dequantize_op(codes, norms, levels, use_pallas=use_pallas)
-    qerr = jnp.sum((own.reshape(-1)[:d] - flat) ** 2)
-    bits_reduce = jnp.float32((words.size + nwords.size) * 32.0 / d)
-    bits_bcast = jnp.float32((w2.size + n2w.size) * 32.0 / d)
+    # own phase-1 payload, decoded shard by shard, for the error metric
+    own = codec.decode(payload, levels, plan, shard=None,
+                       use_pallas=use_pallas).reshape(-1)[:d]
+    qerr = jnp.sum((own - flat) ** 2)
+    bits_reduce = jnp.float32(plan.bits_per_coord)
+    bits_bcast = jnp.float32(
+        32.0 * (plan2.code_words + plan2.norm_words) / d)
     return out, SyncMetrics(bits_reduce + bits_bcast, qerr,
                             bits_reduce, bits_bcast)
 
@@ -197,6 +142,7 @@ def quantized_allreduce(
     mode: str = "all_gather",
     use_pallas: bool = True,
     transport: Transport | None = None,
+    codec: GradientCodec | None = None,
 ) -> tuple[jnp.ndarray, SyncMetrics]:
     """ENCODE -> collective -> DECODE -> average; replicated output.
 
@@ -214,6 +160,9 @@ def quantized_allreduce(
         defaults to plain named-axis collectives over ``axes``.  The
         simulator injects a ``MaskedTransport`` here to drop per-worker
         payloads (worker dropout) without touching the wire-mode code.
+      codec: wire codec override (``core.codec``); defaults to the
+        scheme's uniform codec.  A ``MixedWidthCodec`` threads per-bucket
+        widths through the same transports.
 
     Returns (aggregate mean, SyncMetrics); the aggregate is bit-identical
     on every worker in all modes.
@@ -225,18 +174,24 @@ def quantized_allreduce(
     if mode == "fp32" or not scheme.quantized:
         out = transport.mean_psum(flat)
         return out, SyncMetrics(jnp.float32(32.0), jnp.float32(0.0),
-                                jnp.float32(32.0), jnp.float32(0.0))
+                                jnp.float32(32.0), jnp.float32(0.0),
+                                jnp.float32(32.0))
+    if codec is None:
+        codec = codec_for_scheme(scheme)
 
     levels = state.levels
     if transport.axes:
         key = jax.random.fold_in(key, transport.rank())
     if mode == "all_gather":
-        return _allreduce_all_gather(flat, scheme, levels, key, transport,
-                                     use_pallas)
-    if mode == "two_phase":
-        return _allreduce_two_phase(flat, scheme, levels, key, transport,
-                                    use_pallas)
-    raise ValueError(f"unknown sync mode {mode!r}")
+        out, m = _allreduce_all_gather(flat, codec, levels, key, transport,
+                                       use_pallas)
+    elif mode == "two_phase":
+        out, m = _allreduce_two_phase(flat, codec, levels, key, transport,
+                                      use_pallas)
+    else:
+        raise ValueError(f"unknown sync mode {mode!r}")
+    ent = jnp.asarray(state.entropy_bits, jnp.float32)
+    return out, m._replace(entropy_bits_per_coord=ent)
 
 
 # ---------------------------------------------------------------------------
@@ -259,7 +214,8 @@ def gather_stats(
     """
     flat = flat.reshape(-1)
     axes = tuple(axes)
-    vb = _bucketize(flat, scheme.bucket_size)
+    codec = codec_for_scheme(scheme)
+    vb = codec.bucketize(flat, codec.plan(flat.shape[0]))
     norms, mu, var = ops.bucket_stats_op(vb, norm_type=scheme.norm_type,
                                          use_pallas=use_pallas)
     # keep only fully-populated buckets: alignment padding is all-zero,

@@ -129,11 +129,10 @@ def lower_pair(cfg, shape, mesh, *, sync_mode="all_gather",
         def fn(state, batch):
             return step(state, batch)
 
+        from repro.train.train_step import metric_specs
         smapped = jax.shard_map(
             fn, mesh=mesh, in_specs=(state_specs, batch_specs),
-            out_specs=(state_specs,
-                       {"loss": P(), "grad_norm": P(),
-                        "comm_bits_per_coord": P(), "quant_error": P()}),
+            out_specs=(state_specs, metric_specs()),
             check_vma=False)
         args = (state_struct, specs)
 

@@ -25,7 +25,8 @@ from repro.train import checkpoint
 from repro.train.data import DataConfig, Pipeline
 from repro.train.optim import OptimConfig
 from repro.train.train_step import (
-    TrainConfig, TrainState, init_train_state, make_train_step)
+    TrainConfig, TrainState, init_train_state, make_train_step,
+    metric_specs)
 
 
 def main():
@@ -46,6 +47,12 @@ def main():
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--update-at", default="2,10")
+    ap.add_argument("--codec", default="uniform",
+                    choices=["uniform", "mixed_width"])
+    ap.add_argument("--widths", default="",
+                    help="comma per-bucket scheme bits for "
+                         "--codec mixed_width (cyclic pattern; empty = "
+                         "the budget-neutral bits-1,bits+1 cycle)")
     ap.add_argument("--save", default="")
     ap.add_argument("--use-pallas", action="store_true", default=False)
     args = ap.parse_args()
@@ -66,7 +73,10 @@ def main():
         sync_mode=args.sync,
         update_milestones=tuple(int(x) for x in args.update_at.split(",")),
         update_every=0, microbatches=args.micro,
-        use_pallas=args.use_pallas)
+        use_pallas=args.use_pallas,
+        codec=args.codec,
+        mixed_width_pattern=tuple(
+            int(x) for x in args.widths.split(",") if x))
     step_fn = make_train_step(model, tcfg, data_axes=data_axes)
 
     pipe = Pipeline(DataConfig(kind="markov", vocab_size=cfg.vocab_size,
@@ -83,9 +93,7 @@ def main():
             scheme_state=jax.tree.map(lambda _: P(), state.scheme_state),
             step=P(), rng=P())
         in_specs = (sspecs, {"ids": bspec, "labels": bspec})
-        mspecs = jax.tree.map(lambda _: P(), {
-            "loss": 0, "grad_norm": 0, "comm_bits_per_coord": 0,
-            "quant_error": 0})
+        mspecs = metric_specs()
         train = jax.jit(jax.shard_map(step_fn, in_specs=in_specs,
                                       out_specs=(sspecs, mspecs),
                                       check_vma=False))

@@ -117,7 +117,7 @@ class Model:
                  seq_shard_axes: tuple | None = None,
                  remat: str = "full", param_mode: str = "dp",
                  fsdp_scheme=None, fsdp_sync: str = "quantized",
-                 fsdp_use_pallas: bool = False):
+                 fsdp_use_pallas: bool = False, fsdp_codec=None):
         """remat: 'full' (recompute each layer group in bwd — O(1-layer)
         activation memory), 'dots' (save matmul outputs), or 'none'.
 
@@ -126,7 +126,8 @@ class Model:
         sharded over the data axes, gathered per layer group; gradients
         aggregate inside the gather's custom_vjp — quantized when
         fsdp_sync='quantized' with `fsdp_scheme`, else fp32
-        psum_scatter).  Big-arch configs need fsdp to fit HBM."""
+        psum_scatter; `fsdp_codec` overrides the wire codec, e.g. a
+        MixedWidthCodec).  Big-arch configs need fsdp to fit HBM."""
         self.cfg = cfg
         self.tp = tp
         self.dp = dp
@@ -146,12 +147,17 @@ class Model:
         # ---- FSDP layout metadata ----
         self.param_mode = param_mode
         if param_mode == "fsdp":
+            from repro.core.codec import codec_for_scheme
             from repro.core.schemes import QuantScheme
             scheme = fsdp_scheme or QuantScheme(name="fp32")
             self._fsdp_scheme = scheme
+            # the codec that actually rides the backward wire — exposed
+            # so train_step's metrics report THIS, not its own config
+            self._fsdp_codec = (fsdp_codec if fsdp_codec is not None
+                                else codec_for_scheme(scheme))
             self._gather = fsdp_lib.make_gather(
                 data_axes, scheme, fsdp_sync,
-                use_pallas=fsdp_use_pallas)
+                use_pallas=fsdp_use_pallas, codec=self._fsdp_codec)
             self._slot_meta = []
             self._slot_len = []
             world = dp

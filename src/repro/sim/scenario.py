@@ -31,6 +31,11 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.core.codec import (
+    GradientCodec,
+    MixedWidthCodec,
+    mixed_widths_from_gradient,
+)
 from repro.core.schemes import QuantScheme, SchemeState
 from repro.core.stats import expected_variance
 from repro.dist.sync import gather_stats
@@ -63,6 +68,11 @@ class Scenario:
     sync_mode: str = "all_gather"       # allreduce topology wire mode
     server_bits: int | None = 8         # param_server downlink grid
     norm_dtype: str = "float32"
+    codec: str = "uniform"              # 'uniform' | 'mixed_width'
+    # static per-bucket scheme-bits pattern for the mixed-width codec;
+    # empty = derive from a probe-step bit assignment (assign_mixed_widths
+    # on the probe gradient's bucket statistics, budget = scheme bits)
+    mixed_width_pattern: tuple = ()
     cluster: ClusterConfig = ClusterConfig()
     seed: int = 0
 
@@ -134,6 +144,16 @@ register(Scenario(
                 "grid to paper_mlp but with half-width norm side-channel.",
     norm_dtype="float16",
 ))
+register(Scenario(
+    name="mixed_width",
+    description="MixedWidthCodec end to end: per-bucket wire widths from "
+                "a probe-step bit assignment (high-norm/high-variance "
+                "buckets get more levels at the scheme's mean-bits "
+                "budget), threaded through allreduce and param_server.",
+    schemes=("alq", "qsgdinf"),
+    topologies=("allreduce", "param_server"),
+    codec="mixed_width",
+))
 
 
 # ---------------------------------------------------------------------------
@@ -141,7 +161,8 @@ register(Scenario(
 # ---------------------------------------------------------------------------
 
 def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
-                     topo: str, mesh, use_pallas: bool):
+                     topo: str, mesh, use_pallas: bool,
+                     codec: GradientCodec | None = None):
     """Jitted per-step function (runs inside shard_map on the 1x1 mesh so
     the model's internal psum('model') collectives resolve)."""
     M = scn.cluster.num_workers
@@ -152,8 +173,9 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
     masked = scn.cluster.dropout_prob > 0
 
     def step(params, mu, nu, count, levels, multiplier, num_updates,
-             ids, labels, key, do_update, active):
-        scheme_state = SchemeState(levels, multiplier, num_updates)
+             ent_bits, ids, labels, key, do_update, active):
+        scheme_state = SchemeState(levels, multiplier, num_updates,
+                                   ent_bits)
         per = ids.shape[0] // M
 
         def worker_grad(w):
@@ -170,7 +192,7 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
             topo, flats, scheme, scheme_state, key,
             active=active if masked else None,
             sync_mode=scn.sync_mode, server_bits=scn.server_bits,
-            use_pallas=use_pallas)
+            codec=codec, use_pallas=use_pallas)
 
         # end-to-end aggregate error vs the exact (masked) fp32 mean —
         # the metric where ring's per-hop compounding becomes visible
@@ -224,23 +246,63 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
             "drift_sigma": drift_sigma,
             "psi": psi,
             "levels": scheme_state.levels,
+            "entropy_bits_per_coord": scheme_state.entropy_bits,
         }
         return (new_params, new_opt.mu, new_nu, new_opt.count,
                 scheme_state.levels, scheme_state.multiplier,
-                scheme_state.num_updates, metrics)
+                scheme_state.num_updates, scheme_state.entropy_bits,
+                metrics)
 
     smapped = jax.shard_map(
         step, mesh=mesh,
-        in_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(),
+        in_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(), P(),
                   P(), P(), P(), P(), P()),
-        out_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(),
+        out_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(), P(),
                    {k: P() for k in ("loss", "agg_err", "quant_error",
                                      "grad_norm", "sent_bytes",
                                      "recv_bytes", "server_bytes", "hops",
                                      "drift_mu", "drift_sigma", "psi",
-                                     "levels")}),
+                                     "levels", "entropy_bits_per_coord")}),
         check_vma=False)
     return jax.jit(smapped), ocfg
+
+
+def _probe_mixed_widths(model: Model, scheme: QuantScheme, mesh,
+                        params, batch, per_worker: int) -> tuple:
+    """Per-bucket bit assignment from worker 0's probe-step gradient:
+    one real backward on the first batch shard, then the shared
+    stats -> widths protocol (``codec.mixed_widths_from_gradient``) —
+    the static width pattern the whole cell then runs on.
+    """
+    pspecs = model.param_specs()
+
+    def gradf(p, ids, labels):
+        g = jax.grad(lambda q: model.loss(
+            q, {"ids": ids, "labels": labels}))(p)
+        flat, _ = ravel_pytree(g)
+        return flat
+
+    f = jax.jit(jax.shard_map(
+        gradf, mesh=mesh, in_specs=(pspecs, P(), P()), out_specs=P(),
+        check_vma=False))
+    with jax.set_mesh(mesh):
+        flat = f(params, batch["ids"][:per_worker],
+                 batch["labels"][:per_worker])
+    return mixed_widths_from_gradient(flat, scheme)
+
+
+def _make_cell_codec(scn: Scenario, scheme: QuantScheme, model: Model,
+                     mesh, params, batch) -> GradientCodec | None:
+    if scn.codec == "uniform" or not scheme.quantized:
+        return None
+    if scn.codec != "mixed_width":
+        raise ValueError(f"unknown scenario codec {scn.codec!r}")
+    widths = scn.mixed_width_pattern or _probe_mixed_widths(
+        model, scheme, mesh, params, batch, scn.batch_per_worker)
+    return MixedWidthCodec(bucket_size=scheme.bucket_size,
+                           norm_type=scheme.norm_type,
+                           norm_dtype=scheme.norm_dtype,
+                           widths=tuple(int(b) for b in widths))
 
 
 def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
@@ -256,8 +318,10 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
 
     with jax.set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(scn.seed))
+    codec = _make_cell_codec(scn, scheme, model, mesh, params,
+                             pipe.batch(0))
     step_fn, ocfg = _build_cell_step(model, scheme, scn, topo, mesh,
-                                     use_pallas)
+                                     use_pallas, codec)
     opt = init_opt_state(ocfg, params)
     state = scheme.init_state()
 
@@ -265,6 +329,7 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
     if nu is None:
         nu = jax.tree.map(jnp.zeros_like, mu)
     levels, mult, n_upd = state.levels, state.multiplier, state.num_updates
+    ent = state.entropy_bits
 
     traj = []
     sim_time = 0.0
@@ -274,8 +339,8 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
             batch = pipe.batch(t)
             compute_ms, active = sample_step(scn.cluster, t)
             key = jax.random.fold_in(jax.random.PRNGKey(scn.seed + 7), t)
-            (params, mu, nu, count, levels, mult, n_upd, m) = step_fn(
-                params, mu, nu, count, levels, mult, n_upd,
+            (params, mu, nu, count, levels, mult, n_upd, ent, m) = step_fn(
+                params, mu, nu, count, levels, mult, n_upd, ent,
                 batch["ids"], batch["labels"], key,
                 jnp.bool_(t in scn.update_milestones),
                 jnp.asarray(active))
@@ -305,6 +370,8 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
                 "drift_mu": float(m["drift_mu"]),
                 "drift_sigma": float(m["drift_sigma"]),
                 "psi": float(m["psi"]),
+                "entropy_bits_per_coord": float(
+                    m["entropy_bits_per_coord"]),
                 "levels": np.asarray(m["levels"]).tolist(),
                 "compute_ms": np.asarray(compute_ms).tolist(),
                 "active": [bool(a > 0) for a in active],
@@ -314,6 +381,10 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
         "topology": topo,
         "bits": scheme.bits,
         "norm_dtype": scheme.norm_dtype,
+        "codec": scn.codec if scheme.quantized else "uniform",
+        "mean_width": (codec.mean_scheme_bits
+                       if isinstance(codec, MixedWidthCodec)
+                       else float(scheme.bits)),
         "steps": traj,
         "totals": {
             "sim_time_ms": sim_time,

@@ -1,8 +1,8 @@
 """Aggregation topologies for the cluster simulator.
 
 Three ways to turn M per-worker gradients into an aggregate, all behind
-one interface (``run_topology``) and all speaking the bit-packed wire
-format of ``core/packing.py``:
+one interface (``run_topology``) and all speaking the packed
+``core.codec.WirePayload`` wire format:
 
 ``allreduce``     The production path, verbatim: M logical workers run
     ``repro.dist.sync.quantized_allreduce`` under ``jax.vmap`` with a
@@ -11,7 +11,7 @@ format of ``core/packing.py``:
     ``dist.transport.MaskedTransport``.
 
 ``param_server``  The classic QSGD worker/server split: every worker
-    ENCODEs on the scheme grid and ships its payload up; the server
+    ENCODEs through the codec and ships its payload up; the server
     DECODEs the surviving payloads, averages, optionally RE-quantizes
     the aggregate on a fixed uniform/L-inf grid (``server_bits``), and
     broadcasts one payload down.  With ``server_bits=None`` the server
@@ -22,17 +22,19 @@ format of ``core/packing.py``:
 
 ``ring``          Chunked ring allreduce with PER-HOP re-quantization:
     the gradient splits into M whole-bucket chunks; M-1 reduce hops pass
-    accumulating partial sums around the ring, each hop re-encoded on
-    the scheme grid, then M-1 gather hops circulate the finished chunks,
-    again re-encoded per hop.  The injected noise therefore compounds
-    with ring distance — the error-vs-topology effect the paper's flat
-    broadcast scheme avoids, made measurable (``quant_error`` records
-    each worker's injected noise; scenario trajectories record the
-    end-to-end aggregate error).
+    accumulating partial sums around the ring, each hop re-encoded via
+    ``codec.requantize``, then M-1 gather hops circulate the finished
+    chunks, again re-encoded per hop.  The injected noise therefore
+    compounds with ring distance — the error-vs-topology effect the
+    paper's flat broadcast scheme avoids, made measurable
+    (``quant_error`` records each worker's injected noise; scenario
+    trajectories record the end-to-end aggregate error).
 
 All three are deterministic functions of (grads, scheme state, key):
 worker-distinct randomness comes from folding worker rank / hop index
-into the replicated key, exactly like the production collectives.
+into the replicated key, exactly like the production collectives.  A
+``MixedWidthCodec`` rides every topology: chunk/shard layouts come from
+the codec's static plan.
 """
 from __future__ import annotations
 
@@ -40,15 +42,13 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import packing
+from repro.core.codec import GradientCodec, codec_for_scheme, requant_codec
 from repro.core.levels import uniform_levels
-from repro.core.quantize import NORM_LINF
 from repro.core.schemes import QuantScheme, SchemeState
 from repro.dist import sync
 from repro.dist.transport import MaskedTransport
-from repro.kernels import ops
-from repro.kernels.quantize import DEFAULT_BUCKET_TILE
 
 # the vmap axis name the simulator runs its logical workers on
 SIM_AXIS = "sim_workers"
@@ -73,31 +73,12 @@ class TopologyResult(NamedTuple):
     quant_error: jnp.ndarray       # (M,) own injected quantization noise
 
 
-def _payload_bytes(n: int, nb: int, num_levels: int, norm_dtype: str) -> float:
-    """Wire bytes of one packed (codes + norms) payload of n coords."""
-    wb = packing.wire_bits_for(num_levels)
-    return 4.0 * (packing.packed_words(n, wb)
-                  + packing.norm_words(nb, norm_dtype))
-
-
-def _wire_norms(norms: jnp.ndarray, norm_dtype: str) -> jnp.ndarray:
-    """Round a (…, nb) norm vector through its packed wire representation
-    so the value path matches the byte accounting (fp32 is a lossless
-    bitcast and skips the round trip)."""
-    if norm_dtype == "float32":
-        return norms
-    nb = norms.shape[-1]
-    flat = norms.reshape(-1, nb)
-    out = jax.vmap(lambda x: packing.unpack_norms(
-        packing.pack_norms(x, norm_dtype), nb, norm_dtype))(flat)
-    return out.reshape(norms.shape)
-
-
 # ---------------------------------------------------------------------------
 # allreduce: the production collective under vmap
 # ---------------------------------------------------------------------------
 
-def _topo_allreduce(grads, scheme, state, key, active, *, mode, use_pallas):
+def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
+                    use_pallas):
     """``active=None`` (statically homogeneous) uses the default
     ``MeshTransport`` — the production ``stacked.mean(0)`` reduction
     order, bit for bit; a mask switches to the renormalizing
@@ -109,7 +90,7 @@ def _topo_allreduce(grads, scheme, state, key, active, *, mode, use_pallas):
                      if active is not None else None)
         return sync.quantized_allreduce(
             g, scheme, state, key, axes=(SIM_AXIS,), mode=mode,
-            use_pallas=use_pallas, transport=transport)
+            use_pallas=use_pallas, transport=transport, codec=codec)
 
     out, m = jax.vmap(worker, axis_name=SIM_AXIS)(grads)
 
@@ -145,35 +126,30 @@ def _topo_allreduce(grads, scheme, state, key, active, *, mode, use_pallas):
 # ---------------------------------------------------------------------------
 
 def _topo_param_server(grads, scheme, state, key, active,
-                       *, server_bits, use_pallas):
+                       *, server_bits, codec, use_pallas):
     M, d = grads.shape
     levels = state.levels
-    L = levels.shape[0]
-    nd = scheme.norm_dtype
-
-    vb = jax.vmap(lambda g: sync._bucketize(g, scheme.bucket_size))(grads)
-    _, nb, bs = vb.shape
-    n = nb * bs
+    plan = codec.plan(d)
 
     # ---- uplink: per-worker encode with the production key schedule ----
+    vb = jax.vmap(lambda g: codec.bucketize(g, plan))(grads)
     keys = jax.vmap(lambda w: jax.random.fold_in(key, w))(jnp.arange(M))
-    codes, norms = jax.vmap(
-        lambda v, k: sync._encode(v, levels, k, scheme.norm_type,
-                                  use_pallas))(vb, keys)
-    norms = _wire_norms(norms, nd)
-    words = jax.vmap(lambda c: packing.pack_signed(c, L))(codes)
+    payloads = jax.vmap(
+        lambda v, k: codec.encode(v, levels, k, plan,
+                                  use_pallas=use_pallas))(vb, keys)
 
     # ---- server: decode surviving payloads, weighted average ----
     # (active=None -> .mean(0): the same float reduction order as the
     # production allreduce, preserving bit-exactness with it)
-    per_worker = sync._decode_streams(words, norms, n, levels, use_pallas)
+    per_worker = codec.decode(payloads, levels, plan,
+                              use_pallas=use_pallas)       # (M, n)
     if active is None:
         agg = per_worker.mean(0)
     else:
         w = active / jnp.maximum(jnp.sum(active), 1.0)
         agg = jnp.tensordot(w, per_worker, axes=(0, 0))  # (n,)
 
-    up = jnp.full((M,), _payload_bytes(n, nb, L, nd), jnp.float32)
+    up = jnp.full((M,), plan.payload_bytes, jnp.float32)
     own = per_worker[:, :d]
     qerr = jnp.sum((own - grads) ** 2, axis=1)
 
@@ -182,14 +158,15 @@ def _topo_param_server(grads, scheme, state, key, active,
         out = jnp.broadcast_to(agg[None, :d], (M, d))
         down = jnp.float32(4.0 * d)                 # raw fp32 broadcast
     else:
+        codec2 = requant_codec(codec, server_bits)
         lv2 = uniform_levels(server_bits)
-        c2, n2 = sync._encode(agg.reshape(nb, bs), lv2,
-                              jax.random.fold_in(key, M + 0x5E2F),
-                              NORM_LINF, use_pallas)
-        dec = ops.dequantize_op(c2, _wire_norms(n2, nd), lv2,
-                                use_pallas=use_pallas)
+        plan2 = codec2.plan_buckets(plan.nb)
+        pay2 = codec2.encode(agg.reshape(plan.nb, plan.bucket_size), lv2,
+                             jax.random.fold_in(key, M + 0x5E2F), plan2,
+                             use_pallas=use_pallas)
+        dec = codec2.decode(pay2, lv2, plan2, use_pallas=use_pallas)
         out = jnp.broadcast_to(dec.reshape(-1)[None, :d], (M, d))
-        down = jnp.float32(_payload_bytes(n, nb, lv2.shape[0], nd))
+        down = jnp.float32(plan2.payload_bytes)
 
     sent = up
     recv = jnp.full((M,), down, jnp.float32)
@@ -202,55 +179,52 @@ def _topo_param_server(grads, scheme, state, key, active,
 # ring: chunked reduce-scatter + all-gather, re-quantized per hop
 # ---------------------------------------------------------------------------
 
-def _ring_quantize(x, levels, key, norm_type, norm_dtype, use_pallas):
-    """Q(x) per worker: x is (M, shard_nb, bs); returns the decoded
-    values that travel one hop (byte size is static, accounted by the
-    caller; norms take the packed wire round trip)."""
-    def one(v, k):
-        u = jax.random.uniform(k, v.shape, jnp.float32)
-        codes, norms = ops.quantize_op(v, u, levels, norm_type=norm_type,
-                                       use_pallas=use_pallas)
-        return ops.dequantize_op(codes, _wire_norms(norms, norm_dtype),
-                                 levels, use_pallas=use_pallas)
+def _ring_qhop(x, levels, hop_key, codec, plan, chunk_of_row, use_pallas):
+    """One re-quantizing hop: row w of x is worker w's current chunk
+    (``chunk_of_row[w]`` — static per hop), re-encoded on the codec's
+    grid for that chunk with worker-distinct randomness."""
     M = x.shape[0]
-    keys = jax.vmap(lambda w: jax.random.fold_in(key, w))(jnp.arange(M))
-    return jax.vmap(one)(x, keys)
+    rows = [codec.requantize(x[w], levels, jax.random.fold_in(hop_key, w),
+                             plan, chunk=chunk_of_row[w],
+                             use_pallas=use_pallas)
+            for w in range(M)]
+    return jnp.stack(rows)
 
 
-def _topo_ring(grads, scheme, state, key, active, *, use_pallas):
+def _topo_ring(grads, scheme, state, key, active, *, codec, use_pallas):
     M, d = grads.shape
     levels = state.levels
-    L = levels.shape[0]
+    plan = codec.plan(d, shards=M)
 
     # Dropout simplification: a dropped worker's *contribution* is
     # zeroed and the sum renormalizes over survivors, but the ring stays
     # closed (no re-formation is simulated) — the cluster layer treats
     # the worker as absent, so its relay traffic is not charged.
     contrib = grads if active is None else grads * active[:, None]
-    vb = jax.vmap(lambda g: sync._bucketize(
-        g, scheme.bucket_size, group=M * DEFAULT_BUCKET_TILE))(contrib)
-    _, nb, bs = vb.shape
-    shard_nb = nb // M
-    shard_n = shard_nb * bs
+    vb = jax.vmap(lambda g: codec.bucketize(g, plan))(contrib)
+    nb = plan.nb
+    shard_nb = plan.shard_nb
+    bs = plan.bucket_size
     # (M, M, shard_nb, bs): worker w's local chunks
     local = vb.reshape(M, M, shard_nb, bs)
     widx = jnp.arange(M)
 
     if not scheme.quantized:
-        def qhop(x, hop_key):
+        def qhop(x, hop_key, chunks):
             return x
     else:
-        def qhop(x, hop_key):
-            return _ring_quantize(x, levels, hop_key, scheme.norm_type,
-                                  scheme.norm_dtype, use_pallas)
+        def qhop(x, hop_key, chunks):
+            return _ring_qhop(x, levels, hop_key, codec, plan, chunks,
+                              use_pallas)
 
     qerr = jnp.zeros((M,), jnp.float32)
 
     # ---- reduce-scatter: M-1 hops of accumulating partial sums ----
-    # at hop h worker w sends its partial of chunk (w - h) mod M to w+1
+    # before hop h, worker w holds its partial of chunk (w - h) mod M
     acc = local[widx, widx]                       # (M, shard_nb, bs)
     for h in range(M - 1):
-        q = qhop(acc, jax.random.fold_in(key, 0x11A0 + h))
+        chunks = [(w - h) % M for w in range(M)]
+        q = qhop(acc, jax.random.fold_in(key, 0x11A0 + h), chunks)
         qerr = qerr + jnp.sum((q - acc) ** 2, axis=(1, 2))
         incoming = jnp.roll(q, 1, axis=0)         # from worker w-1
         cidx = (widx - 1 - h) % M                 # chunk arriving at w
@@ -269,7 +243,8 @@ def _topo_ring(grads, scheme, state, key, active, *, use_pallas):
     views = views.at[widx, own_chunk].set(acc)
     cur = acc
     for h in range(M - 1):
-        q = qhop(cur, jax.random.fold_in(key, 0x22B0 + h))
+        chunks = [(w + 1 - h) % M for w in range(M)]
+        q = qhop(cur, jax.random.fold_in(key, 0x22B0 + h), chunks)
         qerr = qerr + jnp.sum((q - cur) ** 2, axis=(1, 2))
         cur = jnp.roll(q, 1, axis=0)              # from worker w-1
         cidx = (widx - h) % M                     # chunk now held by w
@@ -277,9 +252,9 @@ def _topo_ring(grads, scheme, state, key, active, *, use_pallas):
 
     out = views.reshape(M, nb * bs)[:, :d]
 
-    chunk_bytes = _payload_bytes(shard_n, shard_nb, L, scheme.norm_dtype)
+    chunk_bytes = plan.payload_bytes
     if not scheme.quantized:
-        chunk_bytes = 4.0 * shard_n
+        chunk_bytes = 4.0 * plan.shard_n
     vol = jnp.full((M,), 2.0 * (M - 1) * chunk_bytes, jnp.float32)
     return TopologyResult(out, vol, vol, jnp.float32(0.0),
                           jnp.int32(2 * (M - 1)), qerr)
@@ -299,6 +274,7 @@ def run_topology(
     active: jnp.ndarray | None = None,
     sync_mode: str = "all_gather",
     server_bits: int | None = sync.TWO_PHASE_BITS,
+    codec: GradientCodec | None = None,
     use_pallas: bool = False,
 ) -> TopologyResult:
     """Synchronize (M, d) per-worker gradients over a named topology.
@@ -318,21 +294,28 @@ def run_topology(
         exact fp32 everywhere regardless).
       server_bits: param_server downlink grid width; ``None`` broadcasts
         raw fp32 (bit-identical to allreduce on a homogeneous cluster).
+      codec: wire codec; defaults to the scheme's uniform codec.  A
+        ``MixedWidthCodec`` threads per-bucket widths through every
+        topology.
     """
     grads = jnp.asarray(grads)
     if active is not None:
         active = jnp.asarray(active, jnp.float32)
+    if codec is None:
+        codec = codec_for_scheme(scheme)
     if name == "allreduce":
         return _topo_allreduce(grads, scheme, state, key, active,
-                               mode=sync_mode, use_pallas=use_pallas)
+                               mode=sync_mode, codec=codec,
+                               use_pallas=use_pallas)
     if name == "param_server":
         if not scheme.quantized:
             return _topo_allreduce(grads, scheme, state, key, active,
-                                   mode="fp32", use_pallas=use_pallas)
+                                   mode="fp32", codec=codec,
+                                   use_pallas=use_pallas)
         return _topo_param_server(grads, scheme, state, key, active,
-                                  server_bits=server_bits,
+                                  server_bits=server_bits, codec=codec,
                                   use_pallas=use_pallas)
     if name == "ring":
-        return _topo_ring(grads, scheme, state, key, active,
+        return _topo_ring(grads, scheme, state, key, active, codec=codec,
                           use_pallas=use_pallas)
     raise ValueError(f"unknown topology {name!r}; known: {TOPOLOGIES}")

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro.core.codec import make_codec
 from repro.core.schemes import QuantScheme, SchemeState
 from repro.dist.sync import maybe_update_levels, quantized_allreduce
 from repro.models.transformer import Model
@@ -27,8 +28,14 @@ from .optim import OptimConfig, OptState, apply_updates, init_opt_state
 
 
 class SyncMetricsLite(NamedTuple):
+    """Wire metrics surfaced in real training logs — the same
+    per-direction split + entropy accounting ``repro.sim`` reports."""
+
     comm_bits_per_coord: jnp.ndarray
     quant_error: jnp.ndarray
+    reduce_bits_per_coord: jnp.ndarray
+    broadcast_bits_per_coord: jnp.ndarray
+    entropy_bits_per_coord: jnp.ndarray
 
 
 class TrainState(NamedTuple):
@@ -37,6 +44,21 @@ class TrainState(NamedTuple):
     scheme_state: SchemeState
     step: jnp.ndarray
     rng: jax.Array
+
+
+# every scalar train_step emits; launch/dryrun/test harnesses build their
+# shard_map out_specs from this instead of hard-coding the key set
+TRAIN_METRIC_KEYS = (
+    "loss", "grad_norm", "comm_bits_per_coord", "quant_error",
+    "reduce_bits_per_coord", "broadcast_bits_per_coord",
+    "entropy_bits_per_coord",
+)
+
+
+def metric_specs():
+    """Replicated shard_map out_specs for the train-step metrics dict."""
+    from jax.sharding import PartitionSpec as P
+    return {k: P() for k in TRAIN_METRIC_KEYS}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +70,15 @@ class TrainConfig:
     update_every: int = 10_000          # additionally every k steps
     use_pallas: bool = True
     microbatches: int = 1               # grad accumulation (activation mem)
+    # wire codec of the DP allreduce path ('uniform' | 'mixed_width').
+    # FSDP models configure their backward wire separately via
+    # ``Model(fsdp_codec=...)`` — train metrics report whichever codec
+    # actually ships.
+    codec: str = "uniform"
+    # static per-bucket scheme-bits pattern for codec='mixed_width'
+    # (tiled over the gradient's buckets; e.g. assign_mixed_widths
+    # output).  Empty = the budget-neutral (bits-1, bits+1) cycle.
+    mixed_width_pattern: tuple = ()
 
 
 def init_train_state(model: Model, tcfg: TrainConfig, key) -> TrainState:
@@ -73,6 +104,8 @@ def _is_update_step(tcfg: TrainConfig, step):
 def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
     """Returns train_step(state, batch) for use INSIDE shard_map."""
     scheme = tcfg.scheme
+    codec = (make_codec(scheme, tcfg.codec, tcfg.mixed_width_pattern)
+             if scheme.quantized else None)
 
     def train_step(state: TrainState, batch):
         fsdp = model.param_mode == "fsdp"
@@ -125,8 +158,14 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
                 stats_src, scheme, state.scheme_state,
                 _is_update_step(tcfg, state.step),
                 axes=data_axes, use_pallas=tcfg.use_pallas)
-            from repro.core import packing as _packing
-            wire = _packing.wire_bits_for(scheme.num_levels)
+            # per-direction wire cost of the backward reduce-scatter.
+            # FSDP's wire codec is baked into the Model's gather
+            # (``fsdp_codec``), NOT TrainConfig.codec (which drives the
+            # DP allreduce path) — report what actually ships.
+            fsdp_codec = getattr(model, "_fsdp_codec", codec)
+            quantized_rs = scheme.quantized and fsdp_codec is not None
+            wire = (fsdp_codec.nominal_bits_per_coord if quantized_rs
+                    else 32.0)
             # flat slot/embed leaves were synced in the gather's vjp; the
             # small replicated leaves (final_norm) still need the DP mean
             M = 1
@@ -140,8 +179,13 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
             grad_norm = jnp.sqrt(gn_sq)
             metrics = SyncMetricsLite(
                 comm_bits_per_coord=jnp.float32(
-                    2.0 * wire if scheme.quantized else 32.0),
-                quant_error=jnp.float32(0.0))
+                    2.0 * wire if quantized_rs else 32.0),
+                quant_error=jnp.float32(0.0),
+                reduce_bits_per_coord=jnp.float32(wire),
+                broadcast_bits_per_coord=jnp.float32(
+                    wire if quantized_rs else 0.0),
+                entropy_bits_per_coord=jnp.asarray(
+                    scheme_state.entropy_bits, jnp.float32))
         else:
             flat, unravel = ravel_pytree(grads)
             scheme_state = maybe_update_levels(
@@ -151,7 +195,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
             synced, metrics = quantized_allreduce(
                 flat, scheme, scheme_state, base_key,
                 axes=data_axes, mode=tcfg.sync_mode,
-                use_pallas=tcfg.use_pallas)
+                use_pallas=tcfg.use_pallas, codec=codec)
             grads_synced = unravel(synced)
             grad_norm = jnp.sqrt(jnp.sum(synced * synced))
 
@@ -166,6 +210,9 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
             "grad_norm": grad_norm,
             "comm_bits_per_coord": metrics.comm_bits_per_coord,
             "quant_error": metrics.quant_error,
+            "reduce_bits_per_coord": metrics.reduce_bits_per_coord,
+            "broadcast_bits_per_coord": metrics.broadcast_bits_per_coord,
+            "entropy_bits_per_coord": metrics.entropy_bits_per_coord,
         }
         return new_state, out_metrics
 

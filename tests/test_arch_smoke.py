@@ -69,12 +69,10 @@ def test_smoke_forward_and_train_step(arch):
         assert x.shape == (B, S, cfg.d_model)
         assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
 
+        from repro.train.train_step import metric_specs
         train = jax.jit(jax.shard_map(
             step, in_specs=(state_specs, bspecs),
-            out_specs=(state_specs,
-                       jax.tree.map(lambda _: P(), {
-                           "loss": 0, "grad_norm": 0,
-                           "comm_bits_per_coord": 0, "quant_error": 0})),
+            out_specs=(state_specs, metric_specs()),
             check_vma=False))
         new_state, metrics = train(state, batch)
         assert np.isfinite(float(metrics["loss"]))

@@ -39,12 +39,11 @@ def run_training(scheme_name, bits, steps=30, sync_mode="all_gather",
                 nu=None if state.opt.nu is None else pspecs, count=P()),
             scheme_state=jax.tree.map(lambda _: P(), state.scheme_state),
             step=P(), rng=P())
+        from repro.train.train_step import metric_specs
         train = jax.jit(jax.shard_map(
             step_fn,
             in_specs=(sspecs, {"ids": P("data"), "labels": P("data")}),
-            out_specs=(sspecs, jax.tree.map(lambda _: P(), {
-                "loss": 0, "grad_norm": 0, "comm_bits_per_coord": 0,
-                "quant_error": 0})),
+            out_specs=(sspecs, metric_specs()),
             check_vma=False))
         losses, levels_hist = [], []
         for t in range(steps):
