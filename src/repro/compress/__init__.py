@@ -1,0 +1,72 @@
+"""repro.compress: the stateful gradient-compression algorithm zoo.
+
+Layering (outermost first):
+
+    CompressionAlgorithm   residual state + warmup gates   (this package)
+    GradientCodec          wire layout: dense / mixed / sparse payloads
+    Transport              collectives that move the packed words
+
+Selection is a spec string, mirroring the scheme grammar used
+everywhere else (``TrainConfig(compress=...)``, the ``--compress`` CLI
+flag, ``Scenario(compress=(...,))``):
+
+    "plain"      stateless passthrough (bit-exact with the raw codec path)
+    "ef"         error feedback;          "ef:<warmup_steps>"
+    "topk"       EF + SparseCodec at the scheme's equal-wire-budget k;
+                 "topk:<k>" for an explicit kept count per bucket
+
+See ``docs/compression.md`` for the algorithm math and the sparse wire
+layout.
+"""
+from __future__ import annotations
+
+from .base import CompressionAlgorithm, CompressState, EFAlgorithm
+from .sparse import SparseCodec, sparse_codec_for_scheme
+
+ALGORITHMS = ("plain", "ef", "topk")
+
+__all__ = [
+    "ALGORITHMS",
+    "CompressState",
+    "CompressionAlgorithm",
+    "EFAlgorithm",
+    "SparseCodec",
+    "make_algorithm",
+    "sparse_codec_for_scheme",
+]
+
+
+def make_algorithm(spec: str, scheme,
+                   codec=None) -> CompressionAlgorithm:
+    """Build an algorithm from its spec string.
+
+    ``codec`` is the dense wire codec the algorithm should drive —
+    ``plain`` and ``ef`` compose with ANY dense codec (``None`` means
+    the scheme's uniform codec).  ``topk`` always builds its own
+    ``SparseCodec`` (the spec's ``:k`` argument, or the
+    equal-wire-budget default), so passing an explicit ``codec``
+    together with ``topk`` is a config conflict and raises rather than
+    silently discarding one of the two.
+    """
+    from repro.core.codec import codec_for_scheme
+
+    name, _, arg = str(spec).partition(":")
+    if name == "topk":
+        if codec is not None:
+            raise ValueError(
+                "compress='topk' builds its own SparseCodec and cannot "
+                f"compose with an explicit codec ({type(codec).__name__}"
+                "); configure either the codec or top-k sparsification, "
+                "not both")
+        sparse = sparse_codec_for_scheme(
+            scheme, k=int(arg) if arg else None)
+        return EFAlgorithm(codec=sparse, name="topk")
+    if codec is None:
+        codec = codec_for_scheme(scheme)
+    if name == "plain":
+        return CompressionAlgorithm(codec=codec)
+    if name == "ef":
+        return EFAlgorithm(codec=codec,
+                           warmup_steps=int(arg) if arg else 0)
+    raise ValueError(
+        f"unknown compression algorithm {name!r}; known: {ALGORITHMS}")

@@ -1,0 +1,203 @@
+"""SparseCodec: the sparse (top-k) wire-payload family on the codec seam.
+
+Dense codecs (``UniformCodec`` / ``MixedWidthCodec``) ship one symbol
+per coordinate.  ``SparseCodec`` ships only the ``k`` largest-magnitude
+coordinates of every bucket — the QSGD-style sparsity-aware encoding
+taken to its explicit form: each kept coordinate travels as a
+(bit-packed bucket-local index, quantized value symbol) pair, plus the
+usual packed norm side-channel.  Everything else decodes to exactly 0,
+so the aggregate of M gathered streams is the *union* of the per-worker
+supports (decode scatters each stream into a dense vector; the
+transports' mean over streams then is the gather-style union aggregate).
+
+The wire layout of one payload segment is
+
+    [ value symbols: shard_nb*k symbols, wire_bits(L) each ]
+    [ indices:       shard_nb*k indices, idx_bits each     ]
+    [ norm words:    shard_nb packed bucket norms          ]
+
+with both blocks independently word-aligned, so every word count — and
+therefore the exact shipped bits/coordinate — is static in the
+``WirePlan`` (``k`` is a static codec field).  There is NO dynamic
+length anywhere: wire volume is exact by construction, which is what
+lets the cluster cost model and the acceptance accounting treat sparse
+payloads like any other ``WirePayload``.
+
+Selection is per bucket: ``jax.lax.top_k`` on ``|v|`` (ties break
+toward the lower index), indices re-sorted ascending so the payload is
+canonical.  Kept values are quantized on the SAME adaptive grid the
+dense codecs use (``levels``), with the bucket norm computed over the
+kept set — for L-inf the two agree exactly (the max survives
+selection); for L2 the kept-set norm is the tight normalizer for what
+actually travels.
+
+Zero buckets stay exact fixed points of ENCODE/DECODE (norm 0 ->
+symbols 0 -> decode 0), so bucketize padding never leaks — the same
+invariant the dense codecs guarantee.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.codec import GradientCodec, WirePayload, WirePlan
+
+
+def _idx_bits(bucket_size: int) -> int:
+    return max(1, math.ceil(math.log2(bucket_size)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseCodec(GradientCodec):
+    """Per-bucket top-k magnitude selection; index+value wire payload."""
+
+    num_levels: int = 8   # levels of the kept-value grid (scheme grid)
+    k: int = 64           # kept coordinates per bucket (static)
+
+    def __post_init__(self):
+        if not 1 <= self.k <= self.bucket_size:
+            raise ValueError(
+                f"k={self.k} must be in [1, bucket_size={self.bucket_size}]")
+
+    # -- static accounting ------------------------------------------------
+
+    @property
+    def kept_fraction(self) -> float:
+        return self.k / self.bucket_size
+
+    @property
+    def idx_bits(self) -> int:
+        return _idx_bits(self.bucket_size)
+
+    @property
+    def _wire_bits(self) -> int:
+        return packing.wire_bits_for(self.num_levels)
+
+    @property
+    def nominal_bits_per_coord(self) -> float:
+        return (self.k * (self._wire_bits + self.idx_bits)
+                / self.bucket_size + self._norm_bits_per_coord)
+
+    # -- planning ---------------------------------------------------------
+
+    def _value_words(self, snb: int) -> int:
+        return packing.packed_words(snb * self.k, self._wire_bits)
+
+    def _index_words(self, snb: int) -> int:
+        return packing.packed_words(snb * self.k, self.idx_bits)
+
+    def plan_buckets(self, nb: int, *, shards: int = 1,
+                     d: int | None = None) -> WirePlan:
+        if nb % shards:
+            raise ValueError(f"nb={nb} not divisible by shards={shards}")
+        if d is None:
+            d = nb * self.bucket_size
+        snb = nb // shards
+        cw = self._value_words(snb) + self._index_words(snb)
+        nw = packing.norm_words(snb, self.norm_dtype)
+        return WirePlan(d=d, bucket_size=self.bucket_size, nb=nb,
+                        shards=shards, code_words=cw, norm_words=nw,
+                        widths=None,
+                        bits_per_coord=32.0 * shards * (cw + nw) / d)
+
+    # -- select + quantize (shared by encode / requantize) ----------------
+
+    def _select(self, vb: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(nb, bs) -> (kept values (nb, k), ascending indices (nb, k))."""
+        _, idx = jax.lax.top_k(jnp.abs(vb), self.k)
+        idx = jnp.sort(idx, axis=1)
+        return jnp.take_along_axis(vb, idx, axis=1), idx
+
+    def _quantize_kept(self, sel, levels, key, use_pallas):
+        from repro.kernels import ops
+        u = jax.random.uniform(key, sel.shape, jnp.float32)
+        return ops.quantize_op(sel, u, levels, norm_type=self.norm_type,
+                               use_pallas=use_pallas)
+
+    # -- value <-> wire ---------------------------------------------------
+
+    def encode(self, vb, levels, key, plan, *, use_pallas=True):
+        sel, idx = self._select(vb)
+        codes, norms = self._quantize_kept(sel, levels, key, use_pallas)
+        L = levels.shape[0]
+        snb = plan.shard_nb
+
+        def seg_words(c, i):
+            return jnp.concatenate([packing.pack_signed(c, L),
+                                    packing.pack(i, self.idx_bits)])
+
+        if plan.shards == 1:
+            return WirePayload(
+                words=seg_words(codes, idx),
+                norm_words=packing.pack_norms(norms, self.norm_dtype))
+        words = jnp.stack([
+            seg_words(
+                jax.lax.slice_in_dim(codes, j * snb, (j + 1) * snb),
+                jax.lax.slice_in_dim(idx, j * snb, (j + 1) * snb))
+            for j in range(plan.shards)])
+        nwords = jax.vmap(
+            lambda x: packing.pack_norms(x, self.norm_dtype))(
+                norms.reshape(plan.shards, snb))
+        return WirePayload(words=words, norm_words=nwords)
+
+    def decode(self, payload, levels, plan, *, shard=None,
+               use_pallas=True):
+        # Every segment has the SAME static layout (k is uniform), so the
+        # shard argument needs no lax.switch dispatch: any stream decodes
+        # with one code path regardless of which segment it carries.
+        from repro.kernels import ops
+        words, nwords = payload
+        single = words.ndim == 1
+        if single:
+            words, nwords = words[None], nwords[None]
+        snb = plan.shard_nb
+        bs = self.bucket_size
+        vw = self._value_words(snb)
+        M = words.shape[0]
+        norms = jax.vmap(
+            lambda w: packing.unpack_norms(w, snb, self.norm_dtype))(nwords)
+        L = levels.shape[0]
+        sym = jax.vmap(lambda w: packing.unpack_signed(
+            w[:vw], snb * self.k, L))(words)
+        idx = jax.vmap(lambda w: packing.unpack(
+            w[vw:], snb * self.k, self.idx_bits))(words)
+        vals = ops.dequantize_op(
+            sym.reshape(M * snb, self.k), norms.reshape(-1), levels,
+            use_pallas=use_pallas)                       # (M*snb, k)
+        idx = jnp.minimum(idx.reshape(M * snb, self.k), bs - 1)
+        rows = jnp.arange(M * snb)[:, None]
+        dense = jnp.zeros((M * snb, bs), jnp.float32).at[rows, idx].set(vals)
+        dense = dense.reshape(M, snb * bs)
+        return dense[0] if single else dense
+
+    def requantize(self, vb, levels, key, plan, *, chunk=0,
+                   use_pallas=True):
+        from repro.kernels import ops
+        sel, idx = self._select(vb)
+        codes, norms = self._quantize_kept(sel, levels, key, use_pallas)
+        wn = packing.unpack_norms(
+            packing.pack_norms(norms, self.norm_dtype), norms.shape[0],
+            self.norm_dtype)
+        vals = ops.dequantize_op(codes, wn, levels, use_pallas=use_pallas)
+        rows = jnp.arange(vb.shape[0])[:, None]
+        return jnp.zeros_like(vb).at[rows, idx].set(vals)
+
+
+def sparse_codec_for_scheme(scheme, k: int | None = None) -> SparseCodec:
+    """The scheme's sparse codec; ``k=None`` picks the *equal-wire-budget*
+    default: the largest k whose index+value cost fits the scheme's dense
+    fixed-width symbol budget, ``k = floor(bs * wb / (wb + idx_bits))`` —
+    so ``topk`` and ``plain`` ship the same nominal bits/coordinate out
+    of the box."""
+    wb = packing.wire_bits_for(scheme.num_levels)
+    if k is None:
+        k = max(1, (scheme.bucket_size * wb)
+                // (wb + _idx_bits(scheme.bucket_size)))
+    return SparseCodec(num_levels=scheme.num_levels,
+                       bucket_size=scheme.bucket_size,
+                       norm_type=scheme.norm_type,
+                       norm_dtype=scheme.norm_dtype, k=int(k))

@@ -22,6 +22,12 @@ planned over the whole shard.)
 
 Zero-padding is an exact fixed point of ENCODE/DECODE (sign 0 -> code 0),
 so padded master parameters never drift.
+
+``make_gather(algorithm=...)`` composes the backward with a stateful
+``repro.compress`` algorithm: the reduce-scatter encodes
+``cotangent + residual`` and the new error-feedback residual comes back
+as the cotangent of an explicit ``residual`` input (see
+docs/compression.md).
 """
 from __future__ import annotations
 
@@ -118,13 +124,20 @@ def _rounds_for(shard_nb: int) -> int:
 
 
 def _quantized_reduce_scatter(g, levels, key, *, axes,
-                              codec: GradientCodec, use_pallas):
+                              codec: GradientCodec, use_pallas,
+                              residual=None):
     """(Lp,) per-worker cotangent -> (Lp/M,) shard of the worker MEAN.
 
     Runs in rounds over sub-slices of every shard so the ENCODE of round
     c+1 is independent of (and can overlap) the all-to-all of round c.
     The wire carries the codec's packed payload (words + norm words) —
     the bandwidth-optimal reduce-scatter volume at the codec's widths.
+
+    ``residual`` enables error feedback (``repro.compress``) on this
+    backward: the (Lp,)-shaped memory is added to the cotangent before
+    ENCODE, and the new residual ``inp - Q(inp)`` is assembled from the
+    decode of the worker's OWN sharded payloads — zero additional wire
+    bytes.  Returns ``(shard_mean, new_residual)`` in that case.
     """
     transport = transport_lib.make_transport(axes)
     M = transport.size()
@@ -132,6 +145,8 @@ def _quantized_reduce_scatter(g, levels, key, *, axes,
     # replicated key: correlated rounding across workers would forfeit
     # the 1/M variance averaging of the mean
     key = jax.random.fold_in(key, transport.rank())
+    if residual is not None:
+        g = g + residual
     bs = codec.bucket_size
     nb = g.shape[0] // bs
     shard_nb = nb // M
@@ -140,7 +155,7 @@ def _quantized_reduce_scatter(g, levels, key, *, axes,
     ppr = shard_nb // k  # buckets per shard per round
     gb = g.reshape(M, shard_nb, bs)
 
-    pieces = []
+    pieces, own_rounds = [], []
     for c in range(k):
         sub = jax.lax.slice_in_dim(gb, c * ppr, (c + 1) * ppr, axis=1)
         vb = sub.reshape(M * ppr, bs)
@@ -149,12 +164,22 @@ def _quantized_reduce_scatter(g, levels, key, *, axes,
                                plan, use_pallas=use_pallas)
         if M == 1:
             payload = jax.tree.map(lambda a: a[None], payload)
+        if residual is not None:
+            # own round trip: segment j of the own payload is shard j's
+            # round-c slice -> (M, ppr*bs), row j for shard j
+            own_rounds.append(codec.decode(
+                payload, levels, plan, shard=None, use_pallas=use_pallas))
         received = jax.tree.map(transport.all_to_all, payload)
         vals = codec.decode(received, levels, plan,
                             shard=transport.rank(),
                             use_pallas=use_pallas)     # (M, ppr*bs)
         pieces.append(vals.mean(0))
-    return jnp.concatenate(pieces)
+    shard_mean = jnp.concatenate(pieces)
+    if residual is None:
+        return shard_mean
+    own = jnp.concatenate(
+        [r.reshape(M, ppr, bs) for r in own_rounds], axis=1)  # (M,snb,bs)
+    return shard_mean, g - own.reshape(-1)
 
 
 def _float0_zeros(x):
@@ -162,9 +187,45 @@ def _float0_zeros(x):
     return np.zeros(jnp.shape(x), jax.dtypes.float0)
 
 
+def _check_not_vmapped(shard, axes):
+    """Fail fast on the known jax-0.4.37 quirk: batching the gather's
+    ``custom_vjp`` backward (an ``all_to_all`` reduce-scatter) under a
+    PLAIN ``jax.vmap`` axis mis-shapes the collective's batching rule
+    (``mul got incompatible shapes for broadcasting``).  The shard_map
+    path is unaffected — and is the production path — so point there
+    instead of letting the broadcast error surface layers deeper.
+    """
+    from jax.interpreters import batching
+    x = shard
+    batched = False
+    while isinstance(x, jax.core.Tracer):
+        if isinstance(x, batching.BatchTracer):
+            batched = True
+            break
+        # unwrap one autodiff/batching level (grad wraps the vmap
+        # tracer in a JVPTracer, so one isinstance is not enough)
+        if hasattr(x, "primal"):
+            x = x.primal
+        elif hasattr(x, "val"):
+            x = x.val
+        else:
+            break
+    if batched:
+        raise NotImplementedError(
+            "make_gather cannot run under a plain jax.vmap axis on this "
+            "jax pin (0.4.37): vmap-batching the custom_vjp backward's "
+            "all_to_all reduce-scatter hits a known custom_vjp x "
+            "all_to_all batching quirk.  Run the gather inside "
+            "jax.shard_map over mesh axes "
+            f"{tuple(axes)!r} instead (see tests/test_fsdp_quantized.py "
+            "for the harness), or call _quantized_reduce_scatter "
+            "directly — plain functions vmap fine.")
+
+
 def make_gather(data_axes, scheme: QuantScheme, fsdp_sync: str = "quantized",
                 *, use_pallas: bool = False,
-                codec: GradientCodec | None = None):
+                codec: GradientCodec | None = None,
+                algorithm=None, guard_vmap: bool = True):
     """Returns ``gather(shard, levels, key) -> full`` for one flat slot.
 
     Forward: tiled all_gather of the param shard over ``data_axes``.
@@ -172,18 +233,47 @@ def make_gather(data_axes, scheme: QuantScheme, fsdp_sync: str = "quantized",
     quantized (the codec's packed payload on the wire) when
     ``fsdp_sync == 'quantized'`` and the scheme quantizes, else fp32
     ``psum_scatter``.  ``codec`` defaults to the scheme's uniform codec;
-    a ``MixedWidthCodec`` moves per-bucket mixed widths instead.
+    a ``MixedWidthCodec`` moves per-bucket mixed widths instead, and a
+    ``SparseCodec`` top-k index+value payloads.
+
+    ``algorithm`` (a stateful ``repro.compress`` algorithm, e.g. error
+    feedback) changes the signature to ``gather(shard, levels, key,
+    residual) -> full``: the backward encodes ``cotangent + residual``
+    through the algorithm's codec, and the NEW residual ``inp - Q(inp)``
+    comes back as the cotangent of the ``residual`` input — the only
+    channel a ``custom_vjp`` backward has to emit state.  Callers
+    differentiate with respect to ``residual`` too and carry that
+    "gradient" as next step's memory (see ``tests/test_compress.py``).
+    The 4-arg contract survives the ``fsdp_sync='fp32'`` toggle (the
+    residual flushes into the lossless mean and zeroes); algorithm
+    ``warmup_steps`` raises here — the gather has no step counter to
+    gate on.
 
     ``use_pallas`` defaults to False: on CPU the interpret-mode kernels
     materialize every grid block (see launch/dryrun.py); flip it on for
-    real-TPU runs.
+    real-TPU runs.  ``guard_vmap=False`` disables the fail-fast check
+    for the known plain-vmap batching quirk (kept only so the pinning
+    xfail test can exercise the raw behavior).
     """
     axes = tuple(data_axes)
     quantized = fsdp_sync == "quantized" and scheme.quantized
+    if algorithm is not None:
+        codec = algorithm.codec
+        if algorithm.stateful and algorithm.warmup_steps:
+            raise ValueError(
+                "warmup_steps is not supported on the gather-level EF "
+                "path: the gather carries no step counter, so the gate "
+                "cannot be evaluated here.  Gate the residual in the "
+                "training loop instead (inject zeros until warmup ends).")
+        if not algorithm.stateful:
+            algorithm = None  # 'plain': the stateless 3-arg gather
     if codec is None:
         codec = codec_for_scheme(scheme)
 
     def gather(shard, levels, key):
+        if guard_vmap:
+            _check_not_vmapped(shard, axes)
+
         @jax.custom_vjp
         def f(s, lv, k):
             return jax.lax.all_gather(s, axes, tiled=True)
@@ -206,4 +296,33 @@ def make_gather(data_axes, scheme: QuantScheme, fsdp_sync: str = "quantized",
         f.defvjp(fwd, bwd)
         return f(shard, levels, key)
 
-    return gather
+    def gather_ef(shard, levels, key, residual):
+        if guard_vmap:
+            _check_not_vmapped(shard, axes)
+
+        @jax.custom_vjp
+        def f(s, lv, k, r):
+            return jax.lax.all_gather(s, axes, tiled=True)
+
+        def fwd(s, lv, k, r):
+            return jax.lax.all_gather(s, axes, tiled=True), (lv, k, r)
+
+        def bwd(res, g):
+            lv, k, r = res
+            if quantized:
+                ds, new_r = _quantized_reduce_scatter(
+                    g, lv, k, axes=axes, codec=codec,
+                    use_pallas=use_pallas, residual=r)
+            else:
+                # fp32 toggle: same 4-arg contract, lossless sync ->
+                # the residual is flushed into the mean and zeroed
+                M = transport_lib.axes_size(axes)
+                ds = jax.lax.psum_scatter(
+                    g + r, axes, scatter_dimension=0, tiled=True) / M
+                new_r = jnp.zeros_like(r)
+            return ds, jnp.zeros_like(lv), _float0_zeros(k), new_r
+
+        f.defvjp(fwd, bwd)
+        return f(shard, levels, key, residual)
+
+    return gather_ef if algorithm is not None else gather

@@ -28,6 +28,12 @@ Wire modes
 
 ``fp32``        Plain psum mean (SuperSGD / debugging baseline).
 
+``compressed_allreduce`` wraps the same wire modes in the
+``repro.compress`` algorithm hook (error-feedback residual injection
+before ENCODE, residual update from the codec's own local decode after
+DECODE) — the stateless ``plain`` algorithm is bit-exact with
+``quantized_allreduce``.
+
 ``gather_stats`` is the sufficient-statistics path (Algorithm 1, line 4):
 one fused ``bucket_stats`` sweep, strided subsampling to
 ``max_stat_components``, and a tiny cross-worker mixture merge.
@@ -69,6 +75,12 @@ class SyncMetrics(NamedTuple):
     #   cost of the CURRENT grid: H(L) + Pr(sym != 0) sign bits, fit at
     #   the last level update (``SchemeState.entropy_bits``); fixed-width
     #   wire bits until the first update.
+    residual_norm: jnp.ndarray = 0.0  # ||error-feedback residual|| after
+    #   this step's feedback (repro.compress); 0 for stateless algorithms.
+    kept_fraction: jnp.ndarray = 1.0  # coordinates on the wire / total
+    #   (static; < 1 only for the sparse payload family).  The EXACT
+    #   shipped sparse bits/coord are comm_bits_per_coord — every
+    #   WirePlan accounts indices + values + norms + alignment slop.
 
 
 # ---------------------------------------------------------------------------
@@ -90,7 +102,7 @@ def _allreduce_all_gather(flat, codec, levels, key, transport, use_pallas):
     qerr = jnp.sum((own - flat) ** 2)
     # the single gather IS the broadcast-all hop (paper Sec. 5)
     bits = jnp.float32(plan.bits_per_coord)
-    return out, SyncMetrics(bits, qerr, jnp.float32(0.0), bits)
+    return out, own, SyncMetrics(bits, qerr, jnp.float32(0.0), bits)
 
 
 def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
@@ -122,14 +134,15 @@ def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
     out = out.reshape(-1)[:d]
 
     # own phase-1 payload, decoded shard by shard, for the error metric
+    # (and for the compress layer's residual feedback)
     own = codec.decode(payload, levels, plan, shard=None,
                        use_pallas=use_pallas).reshape(-1)[:d]
     qerr = jnp.sum((own - flat) ** 2)
     bits_reduce = jnp.float32(plan.bits_per_coord)
     bits_bcast = jnp.float32(
         32.0 * (plan2.code_words + plan2.norm_words) / d)
-    return out, SyncMetrics(bits_reduce + bits_bcast, qerr,
-                            bits_reduce, bits_bcast)
+    return out, own, SyncMetrics(bits_reduce + bits_bcast, qerr,
+                                 bits_reduce, bits_bcast)
 
 
 def quantized_allreduce(
@@ -143,7 +156,8 @@ def quantized_allreduce(
     use_pallas: bool = True,
     transport: Transport | None = None,
     codec: GradientCodec | None = None,
-) -> tuple[jnp.ndarray, SyncMetrics]:
+    return_own: bool = False,
+) -> tuple:
     """ENCODE -> collective -> DECODE -> average; replicated output.
 
     Args:
@@ -162,10 +176,16 @@ def quantized_allreduce(
         payloads (worker dropout) without touching the wire-mode code.
       codec: wire codec override (``core.codec``); defaults to the
         scheme's uniform codec.  A ``MixedWidthCodec`` threads per-bucket
-        widths through the same transports.
+        widths through the same transports; a ``SparseCodec``
+        (``repro.compress``) moves top-k index+value payloads.
+      return_own: also return this worker's OWN lossy round trip
+        ``Q(flat)`` (the decode of the bytes it put on the wire) —
+        what the ``repro.compress`` error-feedback layer derives its
+        residual from, at zero additional wire bytes.
 
-    Returns (aggregate mean, SyncMetrics); the aggregate is bit-identical
-    on every worker in all modes.
+    Returns (aggregate mean, SyncMetrics) — or (aggregate, own,
+    SyncMetrics) with ``return_own`` — where the aggregate is
+    bit-identical on every worker in all modes.
     """
     flat = flat.reshape(-1)
     axes = tuple(axes)
@@ -173,9 +193,11 @@ def quantized_allreduce(
         transport = make_transport(axes)
     if mode == "fp32" or not scheme.quantized:
         out = transport.mean_psum(flat)
-        return out, SyncMetrics(jnp.float32(32.0), jnp.float32(0.0),
-                                jnp.float32(32.0), jnp.float32(0.0),
-                                jnp.float32(32.0))
+        m = SyncMetrics(jnp.float32(32.0), jnp.float32(0.0),
+                        jnp.float32(32.0), jnp.float32(0.0),
+                        jnp.float32(32.0))
+        # fp32 sync is lossless: the own round trip is the input itself
+        return (out, flat, m) if return_own else (out, m)
     if codec is None:
         codec = codec_for_scheme(scheme)
 
@@ -183,15 +205,54 @@ def quantized_allreduce(
     if transport.axes:
         key = jax.random.fold_in(key, transport.rank())
     if mode == "all_gather":
-        out, m = _allreduce_all_gather(flat, codec, levels, key, transport,
-                                       use_pallas)
+        out, own, m = _allreduce_all_gather(flat, codec, levels, key,
+                                            transport, use_pallas)
     elif mode == "two_phase":
-        out, m = _allreduce_two_phase(flat, codec, levels, key, transport,
-                                      use_pallas)
+        out, own, m = _allreduce_two_phase(flat, codec, levels, key,
+                                           transport, use_pallas)
     else:
         raise ValueError(f"unknown sync mode {mode!r}")
     ent = jnp.asarray(state.entropy_bits, jnp.float32)
-    return out, m._replace(entropy_bits_per_coord=ent)
+    m = m._replace(entropy_bits_per_coord=ent)
+    return (out, own, m) if return_own else (out, m)
+
+
+def compressed_allreduce(
+    flat: jnp.ndarray,
+    scheme: QuantScheme,
+    state: SchemeState,
+    algorithm,
+    comp_state,
+    key: jax.Array,
+    *,
+    axes=(),
+    mode: str = "all_gather",
+    use_pallas: bool = True,
+    transport: Transport | None = None,
+) -> tuple:
+    """The ``repro.compress`` algorithm hook around ENCODE/DECODE.
+
+    Sequences ``algorithm.prepare`` (error-feedback residual injection)
+    -> ``quantized_allreduce`` on the algorithm's codec ->
+    ``algorithm.feedback`` (residual update from the codec's own local
+    decode — zero additional wire bytes).  With the stateless ``plain``
+    algorithm this is bit-for-bit ``quantized_allreduce`` on the same
+    codec (``comp_state`` may then be ``None``).
+
+    Returns (aggregate mean, new comp_state, SyncMetrics); the metrics
+    carry the algorithm accounting (``residual_norm``,
+    ``kept_fraction``) next to the wire accounting.
+    """
+    flat = flat.reshape(-1)
+    inp = algorithm.prepare(flat, comp_state)
+    out, own, m = quantized_allreduce(
+        inp, scheme, state, key, axes=axes, mode=mode,
+        use_pallas=use_pallas, transport=transport,
+        codec=algorithm.codec, return_own=True)
+    new_state = algorithm.feedback(comp_state, inp, own)
+    m = m._replace(residual_norm=algorithm.residual_norm(new_state),
+                   kept_fraction=jnp.float32(algorithm.kept_fraction))
+    return out, new_state, m
 
 
 # ---------------------------------------------------------------------------

@@ -25,8 +25,8 @@ from repro.train import checkpoint
 from repro.train.data import DataConfig, Pipeline
 from repro.train.optim import OptimConfig
 from repro.train.train_step import (
-    TrainConfig, TrainState, init_train_state, make_train_step,
-    metric_specs)
+    TrainConfig, TrainState, compress_state_specs, init_train_state,
+    make_train_step, metric_specs)
 
 
 def main():
@@ -53,6 +53,10 @@ def main():
                     help="comma per-bucket scheme bits for "
                          "--codec mixed_width (cyclic pattern; empty = "
                          "the budget-neutral bits-1,bits+1 cycle)")
+    ap.add_argument("--compress", default="plain",
+                    help="compression algorithm around the codec "
+                         "(repro.compress): plain | ef[:warmup] | "
+                         "topk[:k]")
     ap.add_argument("--save", default="")
     ap.add_argument("--use-pallas", action="store_true", default=False)
     args = ap.parse_args()
@@ -76,7 +80,8 @@ def main():
         use_pallas=args.use_pallas,
         codec=args.codec,
         mixed_width_pattern=tuple(
-            int(x) for x in args.widths.split(",") if x))
+            int(x) for x in args.widths.split(",") if x),
+        compress=args.compress)
     step_fn = make_train_step(model, tcfg, data_axes=data_axes)
 
     pipe = Pipeline(DataConfig(kind="markov", vocab_size=cfg.vocab_size,
@@ -91,7 +96,8 @@ def main():
                 mu=pspecs,
                 nu=None if state.opt.nu is None else pspecs, count=P()),
             scheme_state=jax.tree.map(lambda _: P(), state.scheme_state),
-            step=P(), rng=P())
+            step=P(), rng=P(),
+            compress_state=compress_state_specs(state, data_axes))
         in_specs = (sspecs, {"ids": bspec, "labels": bspec})
         mspecs = metric_specs()
         train = jax.jit(jax.shard_map(step_fn, in_specs=in_specs,
@@ -101,9 +107,13 @@ def main():
         for t in range(args.steps):
             state, metrics = train(state, pipe.batch(t))
             if t % 5 == 0 or t == args.steps - 1:
+                extra = ("" if args.compress == "plain" else
+                         f" |e|={float(metrics['residual_norm']):.3f}"
+                         f" kept={float(metrics['kept_fraction']):.2f}")
                 print(f"step {t:4d} loss={float(metrics['loss']):.4f} "
                       f"|g|={float(metrics['grad_norm']):.3f} "
-                      f"bits/coord={float(metrics['comm_bits_per_coord']):.1f} "
+                      f"bits/coord={float(metrics['comm_bits_per_coord']):.1f}"
+                      f"{extra} "
                       f"levels={np.asarray(state.scheme_state.levels)[:4].round(3)}",
                       flush=True)
         dt = time.time() - t0

@@ -18,5 +18,6 @@ from .topology import (  # noqa: F401
     SIM_AXIS,
     TOPOLOGIES,
     TopologyResult,
+    run_compressed,
     run_topology,
 )

@@ -39,6 +39,8 @@ def main(argv=None) -> int:
     if args.list:
         for name, s in sorted(SCENARIOS.items()):
             grid = f"{len(s.schemes)}x{len(s.topologies)}"
+            if len(s.compress) > 1:
+                grid += f"x{len(s.compress)}"
             print(f"{name:20s} [{grid} grid, {s.cluster.num_workers} "
                   f"workers, {s.steps} steps] {s.description}")
         return 0

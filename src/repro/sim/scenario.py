@@ -31,6 +31,7 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.compress import CompressionAlgorithm, make_algorithm
 from repro.core.codec import (
     GradientCodec,
     MixedWidthCodec,
@@ -44,7 +45,7 @@ from repro.train.data import DataConfig, Pipeline
 from repro.train.optim import OptimConfig, OptState, apply_updates, init_opt_state
 
 from .cluster import ClusterConfig, sample_step, step_time_ms
-from .topology import SIM_AXIS, TOPOLOGIES, run_topology
+from .topology import SIM_AXIS, TOPOLOGIES, run_compressed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +72,14 @@ class Scenario:
     codec: str = "uniform"              # 'uniform' | 'mixed_width'
     # static per-bucket scheme-bits pattern for the mixed-width codec;
     # empty = derive from a probe-step bit assignment (assign_mixed_widths
-    # on the probe gradient's bucket statistics, budget = scheme bits)
+    # on the probe gradient's bucket statistics, budget = scheme bits).
+    # Without an explicit pattern the assignment is RE-derived at every
+    # level-update milestone, so the widths track drifting bucket stats.
     mixed_width_pattern: tuple = ()
+    # compression-algorithm specs (repro.compress) — the grid's third
+    # axis, crossed with schemes x topologies: 'plain' | 'ef[:warmup]'
+    # | 'topk[:k]'
+    compress: tuple = ("plain",)
     cluster: ClusterConfig = ClusterConfig()
     seed: int = 0
 
@@ -154,6 +161,30 @@ register(Scenario(
     topologies=("allreduce", "param_server"),
     codec="mixed_width",
 ))
+register(Scenario(
+    name="ef_vs_plain",
+    description="Error feedback at a 2-bit uniform grid: the residual "
+                "memory re-injects each step's quantization error, so "
+                "the CUMULATIVE aggregate error (cum_agg_err) stays "
+                "bounded while the stateless 2-bit wire random-walks — "
+                "EF's end-of-run cum_agg_err is strictly lower.",
+    schemes=("qsgdinf:2",),
+    topologies=("allreduce",),
+    compress=("plain", "ef"),
+    steps=10,
+))
+register(Scenario(
+    name="topk_sweep",
+    description="Top-k sparsification at the equal-wire-budget default "
+                "k (index+value payloads cost what the dense symbols "
+                "would): per-step error pays for the dropped support, "
+                "but the EF memory keeps the cumulative aggregate error "
+                "bounded where the dense stateless wire drifts.",
+    schemes=("qsgdinf:2",),
+    topologies=("allreduce", "param_server"),
+    compress=("plain", "topk"),
+    steps=10,
+))
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +193,7 @@ register(Scenario(
 
 def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
                      topo: str, mesh, use_pallas: bool,
-                     codec: GradientCodec | None = None):
+                     algo: CompressionAlgorithm):
     """Jitted per-step function (runs inside shard_map on the 1x1 mesh so
     the model's internal psum('model') collectives resolve)."""
     M = scn.cluster.num_workers
@@ -173,9 +204,12 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
     masked = scn.cluster.dropout_prob > 0
 
     def step(params, mu, nu, count, levels, multiplier, num_updates,
-             ent_bits, ids, labels, key, do_update, active):
+             ent_bits, resid, cstep, cum_err, ids, labels, key,
+             do_update, active):
+        from repro.compress import CompressState
         scheme_state = SchemeState(levels, multiplier, num_updates,
                                    ent_bits)
+        comp_state = CompressState(residual=resid, step=cstep)
         per = ids.shape[0] // M
 
         def worker_grad(w):
@@ -188,11 +222,11 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
 
         losses, flats = jax.lax.map(worker_grad, jnp.arange(M))
 
-        res = run_topology(
-            topo, flats, scheme, scheme_state, key,
+        res, comp_state = run_compressed(
+            topo, flats, scheme, scheme_state, algo, comp_state, key,
             active=active if masked else None,
             sync_mode=scn.sync_mode, server_bits=scn.server_bits,
-            codec=codec, use_pallas=use_pallas)
+            use_pallas=use_pallas)
 
         # end-to-end aggregate error vs the exact (masked) fp32 mean —
         # the metric where ring's per-hop compounding becomes visible
@@ -203,6 +237,12 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
             exact = flats.mean(0)
         agg = res.aggregate[0]
         agg_err = jnp.sum((agg - exact) ** 2)
+        # cumulative aggregate-error VECTOR: the metric error feedback
+        # bounds (sum_t agg_t - sum_t exact_t random-walks for stateless
+        # wires; EF's residual telescopes it down to the final memory)
+        cum_err = cum_err + (agg - exact)
+        cum_agg_err = jnp.sum(cum_err ** 2)
+        residual_norm = jnp.mean(jax.vmap(algo.residual_norm)(comp_state))
 
         # Algorithm 1 line 4 on the simulated cluster: sufficient
         # statistics merged ACROSS the M logical workers (vmap axes are
@@ -236,7 +276,10 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
         metrics = {
             "loss": jnp.mean(losses),
             "agg_err": agg_err,
+            "cum_agg_err": cum_agg_err,
             "quant_error": jnp.mean(res.quant_error),
+            "residual_norm": residual_norm,
+            "kept_fraction": jnp.float32(algo.kept_fraction),
             "grad_norm": jnp.sqrt(jnp.sum(exact ** 2)),
             "sent_bytes": res.sent_bytes,
             "recv_bytes": res.recv_bytes,
@@ -251,16 +294,20 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
         return (new_params, new_opt.mu, new_nu, new_opt.count,
                 scheme_state.levels, scheme_state.multiplier,
                 scheme_state.num_updates, scheme_state.entropy_bits,
+                comp_state.residual, comp_state.step, cum_err,
                 metrics)
 
     smapped = jax.shard_map(
         step, mesh=mesh,
         in_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(), P(),
-                  P(), P(), P(), P(), P()),
+                  P(), P(), P(), P(), P(), P(), P(), P()),
         out_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(), P(),
-                   {k: P() for k in ("loss", "agg_err", "quant_error",
-                                     "grad_norm", "sent_bytes",
-                                     "recv_bytes", "server_bytes", "hops",
+                   P(), P(), P(),
+                   {k: P() for k in ("loss", "agg_err", "cum_agg_err",
+                                     "quant_error", "residual_norm",
+                                     "kept_fraction", "grad_norm",
+                                     "sent_bytes", "recv_bytes",
+                                     "server_bytes", "hops",
                                      "drift_mu", "drift_sigma", "psi",
                                      "levels", "entropy_bits_per_coord")}),
         check_vma=False)
@@ -305,8 +352,8 @@ def _make_cell_codec(scn: Scenario, scheme: QuantScheme, model: Model,
                            widths=tuple(int(b) for b in widths))
 
 
-def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
-              use_pallas: bool) -> dict[str, Any]:
+def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
+              steps: int, use_pallas: bool) -> dict[str, Any]:
     scheme = scn.make_scheme(spec)
     cfg = configs.get_config(scn.arch)
     M = scn.cluster.num_workers
@@ -320,8 +367,9 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
         params = model.init(jax.random.PRNGKey(scn.seed))
     codec = _make_cell_codec(scn, scheme, model, mesh, params,
                              pipe.batch(0))
+    algo = make_algorithm(comp_spec, scheme, codec=codec)
     step_fn, ocfg = _build_cell_step(model, scheme, scn, topo, mesh,
-                                     use_pallas, codec)
+                                     use_pallas, algo)
     opt = init_opt_state(ocfg, params)
     state = scheme.init_state()
 
@@ -331,6 +379,21 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
     levels, mult, n_upd = state.levels, state.multiplier, state.num_updates
     ent = state.entropy_bits
 
+    d = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    dres = d if algo.stateful else 0
+    resid = jnp.zeros((M, dres), jnp.float32)
+    cstep = jnp.zeros((M,), jnp.int32)
+    cum_err = jnp.zeros((d,), jnp.float32)
+
+    # widths are static (trace-time) layout, so tracking drifting bucket
+    # stats happens at the HOST level: on every level-update milestone
+    # the probe protocol re-runs on the current parameters' gradient and
+    # the cell is re-built on the fresh assignment (same cadence as
+    # ``maybe_update_levels``)
+    reassign = (scn.codec == "mixed_width" and scheme.quantized
+                and not scn.mixed_width_pattern)
+    width_reassignments: list[dict[str, Any]] = []
+
     traj = []
     sim_time = 0.0
     wire_total = 0.0
@@ -339,11 +402,30 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
             batch = pipe.batch(t)
             compute_ms, active = sample_step(scn.cluster, t)
             key = jax.random.fold_in(jax.random.PRNGKey(scn.seed + 7), t)
-            (params, mu, nu, count, levels, mult, n_upd, ent, m) = step_fn(
+            (params, mu, nu, count, levels, mult, n_upd, ent,
+             resid, cstep, cum_err, m) = step_fn(
                 params, mu, nu, count, levels, mult, n_upd, ent,
+                resid, cstep, cum_err,
                 batch["ids"], batch["labels"], key,
                 jnp.bool_(t in scn.update_milestones),
                 jnp.asarray(active))
+            if reassign and t in scn.update_milestones:
+                new_widths = _probe_mixed_widths(
+                    model, scheme, mesh, params, batch,
+                    scn.batch_per_worker)
+                changed = tuple(new_widths) != tuple(codec.widths)
+                width_reassignments.append({
+                    "step": t,
+                    "changed": changed,
+                    "mean_width": float(np.mean(new_widths)),
+                    "widths": [int(b) for b in new_widths],
+                })
+                if changed:
+                    codec = dataclasses.replace(
+                        codec, widths=tuple(int(b) for b in new_widths))
+                    algo = make_algorithm(comp_spec, scheme, codec=codec)
+                    step_fn, _ = _build_cell_step(
+                        model, scheme, scn, topo, mesh, use_pallas, algo)
             sent = np.asarray(m["sent_bytes"], np.float64)
             recv = np.asarray(m["recv_bytes"], np.float64)
             server = float(m["server_bytes"])
@@ -365,7 +447,10 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
                 "server_bytes": server,
                 "hops": hops,
                 "agg_err": float(m["agg_err"]),
+                "cum_agg_err": float(m["cum_agg_err"]),
                 "quant_error": float(m["quant_error"]),
+                "residual_norm": float(m["residual_norm"]),
+                "kept_fraction": float(m["kept_fraction"]),
                 "grad_norm": float(m["grad_norm"]),
                 "drift_mu": float(m["drift_mu"]),
                 "drift_sigma": float(m["drift_sigma"]),
@@ -379,12 +464,15 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
     return {
         "scheme": spec,
         "topology": topo,
+        "compress": comp_spec,
         "bits": scheme.bits,
         "norm_dtype": scheme.norm_dtype,
         "codec": scn.codec if scheme.quantized else "uniform",
+        "kept_fraction": float(algo.kept_fraction),
         "mean_width": (codec.mean_scheme_bits
                        if isinstance(codec, MixedWidthCodec)
                        else float(scheme.bits)),
+        "width_reassignments": width_reassignments,
         "steps": traj,
         "totals": {
             "sim_time_ms": sim_time,
@@ -392,6 +480,8 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
             "final_loss": traj[-1]["loss"] if traj else None,
             "mean_agg_err": (float(np.mean([s["agg_err"] for s in traj]))
                              if traj else None),
+            "final_cum_agg_err": (traj[-1]["cum_agg_err"] if traj
+                                  else None),
         },
     }
 
@@ -399,7 +489,8 @@ def _run_cell(scn: Scenario, spec: str, topo: str, steps: int,
 def run_scenario(scn: Scenario, *, steps: int | None = None,
                  workers: int | None = None,
                  use_pallas: bool = False) -> dict[str, Any]:
-    """Run every (scheme, topology) cell of a scenario; JSON-ready dict."""
+    """Run every (scheme, topology, compress) cell of a scenario;
+    JSON-ready dict."""
     if workers is not None:
         scn = dataclasses.replace(
             scn, cluster=dataclasses.replace(scn.cluster,
@@ -408,7 +499,9 @@ def run_scenario(scn: Scenario, *, steps: int | None = None,
     cells = []
     for spec in scn.schemes:
         for topo in scn.topologies:
-            cells.append(_run_cell(scn, spec, topo, n_steps, use_pallas))
+            for comp in scn.compress:
+                cells.append(_run_cell(scn, spec, topo, comp, n_steps,
+                                       use_pallas))
     out = {
         "scenario": scn.name,
         "description": scn.description,

@@ -34,7 +34,9 @@ All three are deterministic functions of (grads, scheme state, key):
 worker-distinct randomness comes from folding worker rank / hop index
 into the replicated key, exactly like the production collectives.  A
 ``MixedWidthCodec`` rides every topology: chunk/shard layouts come from
-the codec's static plan.
+the codec's static plan — as does the ``SparseCodec`` top-k payload
+family.  ``run_compressed`` wraps any topology in the ``repro.compress``
+algorithm hook, threading M per-worker error-feedback residuals.
 """
 from __future__ import annotations
 
@@ -71,6 +73,9 @@ class TopologyResult(NamedTuple):
     server_bytes: jnp.ndarray      # () through the server (0 if none)
     hops: jnp.ndarray              # () latency-serialized hops
     quant_error: jnp.ndarray       # (M,) own injected quantization noise
+    own: jnp.ndarray | None = None  # (M, d) each worker's own lossy
+    #   round trip Q(input) — the repro.compress feedback signal; only
+    #   populated under run_topology(want_own=True)
 
 
 # ---------------------------------------------------------------------------
@@ -78,7 +83,7 @@ class TopologyResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
-                    use_pallas):
+                    use_pallas, want_own=False):
     """``active=None`` (statically homogeneous) uses the default
     ``MeshTransport`` — the production ``stacked.mean(0)`` reduction
     order, bit for bit; a mask switches to the renormalizing
@@ -90,9 +95,10 @@ def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
                      if active is not None else None)
         return sync.quantized_allreduce(
             g, scheme, state, key, axes=(SIM_AXIS,), mode=mode,
-            use_pallas=use_pallas, transport=transport, codec=codec)
+            use_pallas=use_pallas, transport=transport, codec=codec,
+            return_own=True)
 
-    out, m = jax.vmap(worker, axis_name=SIM_AXIS)(grads)
+    out, own, m = jax.vmap(worker, axis_name=SIM_AXIS)(grads)
 
     # byte accounting from the per-direction metrics (bits are per
     # original coordinate; padding is already folded in by sync)
@@ -118,7 +124,8 @@ def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
         recv = jnp.sum(p) - p
         hops = 1
     return TopologyResult(out, sent, recv, jnp.float32(0.0),
-                          jnp.int32(hops), m.quant_error)
+                          jnp.int32(hops), m.quant_error,
+                          own if want_own else None)
 
 
 # ---------------------------------------------------------------------------
@@ -126,7 +133,8 @@ def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
 # ---------------------------------------------------------------------------
 
 def _topo_param_server(grads, scheme, state, key, active,
-                       *, server_bits, codec, use_pallas):
+                       *, server_bits, codec, use_pallas,
+                       want_own=False):
     M, d = grads.shape
     levels = state.levels
     plan = codec.plan(d)
@@ -172,7 +180,8 @@ def _topo_param_server(grads, scheme, state, key, active,
     recv = jnp.full((M,), down, jnp.float32)
     server_bytes = jnp.sum(up) + M * down
     return TopologyResult(out, sent, recv, server_bytes,
-                          jnp.int32(2), qerr)
+                          jnp.int32(2), qerr,
+                          own if want_own else None)
 
 
 # ---------------------------------------------------------------------------
@@ -191,7 +200,8 @@ def _ring_qhop(x, levels, hop_key, codec, plan, chunk_of_row, use_pallas):
     return jnp.stack(rows)
 
 
-def _topo_ring(grads, scheme, state, key, active, *, codec, use_pallas):
+def _topo_ring(grads, scheme, state, key, active, *, codec, use_pallas,
+               want_own=False):
     M, d = grads.shape
     levels = state.levels
     plan = codec.plan(d, shards=M)
@@ -252,12 +262,33 @@ def _topo_ring(grads, scheme, state, key, active, *, codec, use_pallas):
 
     out = views.reshape(M, nb * bs)[:, :d]
 
+    own = None
+    if want_own:
+        # Per-hop re-quantization means worker w's contribution is only
+        # ever rounded ALONE at its first hop (chunk w, hop 0); for the
+        # compress layer's residual we use the full first-quantization
+        # round trip Q(inp_w) — the noise the worker itself injects —
+        # re-using the hop-0 key schedule so chunk w matches the wire.
+        if not scheme.quantized:
+            own = grads
+        else:
+            k0 = jax.random.fold_in(key, 0x11A0)
+
+            def own_worker(v, w):
+                hop_key = jax.random.fold_in(k0, w)
+                segs = [codec.requantize(
+                    v.reshape(M, shard_nb, bs)[c], levels, hop_key, plan,
+                    chunk=c, use_pallas=use_pallas) for c in range(M)]
+                return jnp.stack(segs).reshape(-1)[:d]
+
+            own = jnp.stack([own_worker(vb[w], w) for w in range(M)])
+
     chunk_bytes = plan.payload_bytes
     if not scheme.quantized:
         chunk_bytes = 4.0 * plan.shard_n
     vol = jnp.full((M,), 2.0 * (M - 1) * chunk_bytes, jnp.float32)
     return TopologyResult(out, vol, vol, jnp.float32(0.0),
-                          jnp.int32(2 * (M - 1)), qerr)
+                          jnp.int32(2 * (M - 1)), qerr, own)
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +307,7 @@ def run_topology(
     server_bits: int | None = sync.TWO_PHASE_BITS,
     codec: GradientCodec | None = None,
     use_pallas: bool = False,
+    want_own: bool = False,
 ) -> TopologyResult:
     """Synchronize (M, d) per-worker gradients over a named topology.
 
@@ -296,7 +328,11 @@ def run_topology(
         raw fp32 (bit-identical to allreduce on a homogeneous cluster).
       codec: wire codec; defaults to the scheme's uniform codec.  A
         ``MixedWidthCodec`` threads per-bucket widths through every
-        topology.
+        topology, a ``SparseCodec`` top-k index+value payloads.
+      want_own: also populate ``TopologyResult.own`` — each worker's own
+        lossy round trip Q(input), the ``repro.compress`` feedback
+        signal (free for allreduce/param_server; the ring pays an extra
+        local requantize pass).
     """
     grads = jnp.asarray(grads)
     if active is not None:
@@ -306,16 +342,56 @@ def run_topology(
     if name == "allreduce":
         return _topo_allreduce(grads, scheme, state, key, active,
                                mode=sync_mode, codec=codec,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas, want_own=want_own)
     if name == "param_server":
         if not scheme.quantized:
             return _topo_allreduce(grads, scheme, state, key, active,
                                    mode="fp32", codec=codec,
-                                   use_pallas=use_pallas)
+                                   use_pallas=use_pallas,
+                                   want_own=want_own)
         return _topo_param_server(grads, scheme, state, key, active,
                                   server_bits=server_bits, codec=codec,
-                                  use_pallas=use_pallas)
+                                  use_pallas=use_pallas,
+                                  want_own=want_own)
     if name == "ring":
         return _topo_ring(grads, scheme, state, key, active, codec=codec,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas, want_own=want_own)
     raise ValueError(f"unknown topology {name!r}; known: {TOPOLOGIES}")
+
+
+def run_compressed(
+    name: str,
+    grads: jnp.ndarray,
+    scheme: QuantScheme,
+    state: SchemeState,
+    algorithm,
+    comp_state,
+    key: jax.Array,
+    *,
+    active: jnp.ndarray | None = None,
+    sync_mode: str = "all_gather",
+    server_bits: int | None = sync.TWO_PHASE_BITS,
+    use_pallas: bool = False,
+):
+    """``run_topology`` under a ``repro.compress`` algorithm.
+
+    ``comp_state`` is the M-stacked per-worker ``CompressState``
+    (leading worker axis on every leaf).  Sequences the same
+    prepare -> wire -> feedback hook as ``dist.sync
+    .compressed_allreduce``, with per-worker residuals: worker w's
+    residual is derived from ITS own round trip only.  With the
+    stateless ``plain`` algorithm the wire path (and therefore the
+    aggregate) is bit-identical to ``run_topology`` on the same codec.
+
+    Returns ``(TopologyResult, new comp_state)``.
+    """
+    grads = jnp.asarray(grads)
+    prep = jax.vmap(algorithm.prepare)(grads, comp_state)
+    codec = algorithm.codec if scheme.quantized else None
+    res = run_topology(name, prep, scheme, state, key, active=active,
+                       sync_mode=sync_mode, server_bits=server_bits,
+                       codec=codec, use_pallas=use_pallas,
+                       want_own=algorithm.stateful)
+    own = res.own if algorithm.stateful else prep
+    new_comp = jax.vmap(algorithm.feedback)(comp_state, prep, own)
+    return res, new_comp

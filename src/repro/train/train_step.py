@@ -20,22 +20,27 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro.compress import make_algorithm
 from repro.core.codec import make_codec
 from repro.core.schemes import QuantScheme, SchemeState
-from repro.dist.sync import maybe_update_levels, quantized_allreduce
+from repro.dist.sync import (
+    compressed_allreduce, maybe_update_levels, quantized_allreduce)
 from repro.models.transformer import Model
 from .optim import OptimConfig, OptState, apply_updates, init_opt_state
 
 
 class SyncMetricsLite(NamedTuple):
     """Wire metrics surfaced in real training logs — the same
-    per-direction split + entropy accounting ``repro.sim`` reports."""
+    per-direction split + entropy + compression accounting ``repro.sim``
+    reports."""
 
     comm_bits_per_coord: jnp.ndarray
     quant_error: jnp.ndarray
     reduce_bits_per_coord: jnp.ndarray
     broadcast_bits_per_coord: jnp.ndarray
     entropy_bits_per_coord: jnp.ndarray
+    residual_norm: jnp.ndarray = 0.0
+    kept_fraction: jnp.ndarray = 1.0
 
 
 class TrainState(NamedTuple):
@@ -44,6 +49,27 @@ class TrainState(NamedTuple):
     scheme_state: SchemeState
     step: jnp.ndarray
     rng: jax.Array
+    # repro.compress algorithm state (error-feedback residual + step
+    # counter), checkpointed/restored like optimizer state.  ``None``
+    # for stateless algorithms (the default 'plain'), keeping the state
+    # pytree — and every existing checkpoint/spec construction —
+    # unchanged unless a stateful algorithm is configured.  The residual
+    # is PER-WORKER state: it carries a leading data-parallel axis
+    # (dp, d), sharded over the data axes (``compress_state_specs``), so
+    # each rank owns exactly its residual row.
+    compress_state: Any = None
+
+
+def compress_state_specs(state: TrainState, data_axes=("data",)):
+    """shard_map specs for ``TrainState.compress_state``: the residual
+    is sharded over the data axes (one row per DP rank), the step
+    counter replicated.  ``None`` passes through for stateless
+    algorithms."""
+    from jax.sharding import PartitionSpec as P
+    if state.compress_state is None:
+        return None
+    from repro.compress import CompressState
+    return CompressState(residual=P(tuple(data_axes)), step=P())
 
 
 # every scalar train_step emits; launch/dryrun/test harnesses build their
@@ -51,7 +77,7 @@ class TrainState(NamedTuple):
 TRAIN_METRIC_KEYS = (
     "loss", "grad_norm", "comm_bits_per_coord", "quant_error",
     "reduce_bits_per_coord", "broadcast_bits_per_coord",
-    "entropy_bits_per_coord",
+    "entropy_bits_per_coord", "residual_norm", "kept_fraction",
 )
 
 
@@ -79,16 +105,47 @@ class TrainConfig:
     # (tiled over the gradient's buckets; e.g. assign_mixed_widths
     # output).  Empty = the budget-neutral (bits-1, bits+1) cycle.
     mixed_width_pattern: tuple = ()
+    # compression algorithm around the codec (repro.compress):
+    # 'plain' | 'ef[:warmup_steps]' | 'topk[:k]'.  Drives the DP
+    # allreduce path; for FSDP backward error feedback see
+    # ``dist.fsdp.make_gather(algorithm=...)``.
+    compress: str = "plain"
+
+
+def _make_algo(tcfg: TrainConfig):
+    if not tcfg.scheme.quantized:
+        return None
+    # None = the scheme's uniform codec; only a non-default codec is
+    # passed explicitly (make_algorithm rejects codec overrides for
+    # 'topk', which owns its SparseCodec)
+    codec = (make_codec(tcfg.scheme, tcfg.codec,
+                        tcfg.mixed_width_pattern)
+             if tcfg.codec != "uniform" else None)
+    return make_algorithm(tcfg.compress, tcfg.scheme, codec=codec)
 
 
 def init_train_state(model: Model, tcfg: TrainConfig, key) -> TrainState:
     params = model.init(key)
+    algo = _make_algo(tcfg)
+    compress_state = None
+    if algo is not None and algo.stateful:
+        if model.param_mode == "fsdp":
+            raise NotImplementedError(
+                "stateful compression on the FSDP path is wired at the "
+                "gather level (dist.fsdp.make_gather(algorithm=...)), "
+                "not through TrainConfig.compress")
+        d = sum(int(x.size) for x in jax.tree.leaves(params))
+        cs = algo.init_state(d)
+        # one residual row per DP rank (sharded over the data axes)
+        compress_state = cs._replace(
+            residual=jnp.zeros((model.dp, d), jnp.float32))
     return TrainState(
         params=params,
         opt=init_opt_state(tcfg.optim, params),
         scheme_state=tcfg.scheme.init_state(),
         step=jnp.zeros((), jnp.int32),
         rng=jax.random.PRNGKey(0),
+        compress_state=compress_state,
     )
 
 
@@ -104,8 +161,8 @@ def _is_update_step(tcfg: TrainConfig, step):
 def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
     """Returns train_step(state, batch) for use INSIDE shard_map."""
     scheme = tcfg.scheme
-    codec = (make_codec(scheme, tcfg.codec, tcfg.mixed_width_pattern)
-             if scheme.quantized else None)
+    algo = _make_algo(tcfg)
+    codec = algo.codec if algo is not None else None
 
     def train_step(state: TrainState, batch):
         fsdp = model.param_mode == "fsdp"
@@ -149,6 +206,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
             loss = loss / k
             grads = jax.tree.map(lambda a: a / k, grads)
 
+        new_comp = state.compress_state
         if fsdp:
             # gradients were already quantized-reduce-scattered inside the
             # FSDP gather's custom_vjp; levels adapt from one (flat,
@@ -192,10 +250,31 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
                 flat, scheme, state.scheme_state,
                 _is_update_step(tcfg, state.step),
                 axes=data_axes, use_pallas=tcfg.use_pallas)
-            synced, metrics = quantized_allreduce(
-                flat, scheme, scheme_state, base_key,
-                axes=data_axes, mode=tcfg.sync_mode,
-                use_pallas=tcfg.use_pallas, codec=codec)
+            if algo is None:  # fp32 / super_sgd: plain mean psum
+                synced, metrics = quantized_allreduce(
+                    flat, scheme, scheme_state, base_key,
+                    axes=data_axes, mode=tcfg.sync_mode,
+                    use_pallas=tcfg.use_pallas)
+            else:
+                cs = state.compress_state
+                if cs is not None:
+                    # inside shard_map each rank holds its (1, d) row of
+                    # the data-axis-sharded residual
+                    cs = cs._replace(residual=cs.residual[0])
+                synced, new_comp, metrics = compressed_allreduce(
+                    flat, scheme, scheme_state, algo, cs, base_key,
+                    axes=data_axes, mode=tcfg.sync_mode,
+                    use_pallas=tcfg.use_pallas)
+                if new_comp is not None:
+                    new_comp = new_comp._replace(
+                        residual=new_comp.residual[None])
+                    # per-rank residual magnitudes differ; report the
+                    # replicated DP mean
+                    metrics = metrics._replace(
+                        residual_norm=jax.lax.pmean(
+                            jnp.asarray(metrics.residual_norm,
+                                        jnp.float32),
+                            tuple(data_axes)))
             grads_synced = unravel(synced)
             grad_norm = jnp.sqrt(jnp.sum(synced * synced))
 
@@ -204,7 +283,8 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
 
         new_state = TrainState(
             params=new_params, opt=new_opt, scheme_state=scheme_state,
-            step=state.step + 1, rng=state.rng)
+            step=state.step + 1, rng=state.rng,
+            compress_state=new_comp)
         out_metrics = {
             "loss": jax.lax.pmean(loss, tuple(data_axes)),
             "grad_norm": grad_norm,
@@ -213,6 +293,10 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
             "reduce_bits_per_coord": metrics.reduce_bits_per_coord,
             "broadcast_bits_per_coord": metrics.broadcast_bits_per_coord,
             "entropy_bits_per_coord": metrics.entropy_bits_per_coord,
+            "residual_norm": jnp.asarray(metrics.residual_norm,
+                                         jnp.float32),
+            "kept_fraction": jnp.asarray(metrics.kept_fraction,
+                                         jnp.float32),
         }
         return new_state, out_metrics
 
