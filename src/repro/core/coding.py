@@ -1,10 +1,13 @@
 """Entropy coding / code-length accounting (paper App. D, Thm 3).
 
 The device wire format is fixed-width packed indices (packing.py); this
-module provides the paper's *expected-bits* accounting: closed-form level
-occupancy probabilities Pr(l_j) (Prop. 6), their entropy H(L), a real
-host-side Huffman code built from those probabilities, and the Thm-3
-bound  E|ENCODE(v)| <= b + n_{l1,d} + d (H(L) + 1).
+module provides the paper's *expected-bits* accounting — closed-form
+level occupancy probabilities Pr(l_j) (Prop. 6), their entropy H(L), a
+real host-side Huffman code built from those probabilities, and the
+Thm-3 bound  E|ENCODE(v)| <= b + n_{l1,d} + d (H(L) + 1) — plus the
+static canonical-Huffman *wire table* (``entropy_table``) that
+``core.codec.EntropyCodec`` uses to realize that cost as actual coded
+bytes.
 """
 from __future__ import annotations
 
@@ -23,10 +26,16 @@ def level_probabilities(levels: jnp.ndarray, stats: TruncNormStats) -> jnp.ndarr
     Pr(l_j) = int_{l_{j-1}}^{l_j} (r-l_{j-1})/(l_j-l_{j-1}) dF
             + int_{l_j}^{l_{j+1}} (l_{j+1}-r)/(l_{j+1}-l_j) dF
     with one-sided variants at the endpoints.  Returns a vector over all
-    levels (including 0 and 1) summing to 1.
+    levels (including 0 and 1) summing to 1 — also in the degenerate
+    edges (a single-level grid, sigma -> 0 mass collapsed onto one bin),
+    where the closed form loses all its mass and the uniform
+    distribution is the honest fallback.
     """
     l = levels
     n = l.shape[0]
+    if n == 1:
+        # one level: the symbol is deterministic
+        return jnp.ones((1,), l.dtype)
     a, b = l[:-1], l[1:]  # bin edges
     gap = jnp.maximum(b - a, 1e-12)
     m0 = partial_moment0(stats, a, b)
@@ -36,9 +45,14 @@ def level_probabilities(levels: jnp.ndarray, stats: TruncNormStats) -> jnp.ndarr
     probs = jnp.zeros((n,), l.dtype)
     probs = probs.at[1:].add(up)
     probs = probs.at[:-1].add(down)
-    # numerical cleanup: F may not integrate exactly to 1 on [0,1]
+    # numerical cleanup: F may not integrate exactly to 1 on [0,1]; a
+    # fully degenerate fit (all mass lost to rounding) falls back to
+    # uniform occupancies rather than an all-zero "distribution"
     probs = jnp.clip(probs, 0.0, None)
-    return probs / jnp.maximum(jnp.sum(probs), 1e-12)
+    total = jnp.sum(probs)
+    uniform = jnp.full((n,), 1.0 / n, l.dtype)
+    return jnp.where(total > 1e-12, probs / jnp.maximum(total, 1e-12),
+                     uniform)
 
 
 def entropy_bits(probs: jnp.ndarray) -> jnp.ndarray:
@@ -98,6 +112,103 @@ def expected_bits_per_coordinate(
     )
     p_nonzero = 1.0 - probs[0]
     return mag + p_nonzero  # one sign bit whenever the symbol is nonzero
+
+
+# ---------------------------------------------------------------------------
+# canonical-Huffman wire table (consumed by core.codec.EntropyCodec)
+# ---------------------------------------------------------------------------
+
+# Longest wire codeword the variable-length packer supports: a codeword
+# must fit one uint32 so that, at any bit offset, it spills into at most
+# one following word (the same two-scatter invariant packing.pack uses).
+MAX_CODE_BITS = 32
+
+# Probability floor applied before building the wire table: bounds the
+# depth of the Huffman tree (a symbol with floored probability p gets a
+# code no longer than ~log2(1/p) + alphabet slack), so even never-seen
+# symbols keep codeword lengths far inside MAX_CODE_BITS.
+_PROB_FLOOR = 2.0 ** -20
+
+
+def signed_symbol_probabilities(level_probs: Sequence[float]) -> np.ndarray:
+    """Magnitude-level occupancies -> the joint *signed-symbol* alphabet.
+
+    The wire alphabet is the ``2L - 1`` biased signed indices
+    (``packing.bias_codes``): symbol ``L - 1`` is the shared zero, and
+    level ``j > 0`` splits into +/- with half its mass each (stochastic
+    rounding is sign-symmetric).  The joint entropy is exactly
+    ``H(L) + Pr(sym != 0)`` — the metered ``SchemeState.entropy_bits``
+    accounting — so a Huffman code on this alphabet realizes the metered
+    cost to within the usual < 1 bit/symbol redundancy.
+    """
+    p = np.asarray(level_probs, np.float64)
+    L = p.shape[0]
+    joint = np.empty(2 * L - 1, np.float64)
+    joint[L - 1] = p[0]
+    for j in range(1, L):
+        joint[L - 1 + j] = joint[L - 1 - j] = p[j] / 2.0
+    return joint
+
+
+def canonical_code(lengths: Sequence[int]) -> np.ndarray:
+    """Canonical prefix codewords from code lengths, bit-reversed for an
+    LSB-first wire.
+
+    Symbols are ranked by ``(length, symbol)`` and assigned consecutive
+    MSB-first canonical values (the textbook construction; valid for any
+    Kraft-satisfying length vector).  Each value is then bit-reversed
+    within its length, so a packer that emits codeword bit 0 first — the
+    little-endian-in-word convention of ``packing.pack`` — transmits the
+    canonical code MSB-first on the wire (the DEFLATE trick).
+    """
+    lengths = np.asarray(lengths, np.int64)
+    S = lengths.shape[0]
+    order = sorted(range(S), key=lambda s: (lengths[s], s))
+    codes = np.zeros(S, np.uint64)
+    code = 0
+    prev = int(lengths[order[0]])
+    for s in order:
+        code <<= int(lengths[s]) - prev
+        prev = int(lengths[s])
+        rev = 0
+        for b in range(prev):  # bit-reverse within the code length
+            rev = (rev << 1) | ((code >> b) & 1)
+        codes[s] = rev
+        code += 1
+    return codes.astype(np.uint32)
+
+
+def entropy_table(level_probs: Sequence[float] | None,
+                  num_levels: int) -> tuple[tuple, tuple]:
+    """(lengths, wire codewords) for the signed-symbol alphabet.
+
+    ``level_probs=None`` builds the cold-start table from uniform joint
+    occupancies (codeword lengths ~ the fixed wire width), so an
+    ``EntropyCodec`` is decodable before any statistics exist.  The
+    table is returned as hashable int tuples — it is *static* codec
+    configuration, baked into the trace like a mixed-width pattern.
+    """
+    S = 2 * num_levels - 1
+    if level_probs is None:
+        joint = np.full(S, 1.0 / S, np.float64)
+    else:
+        p = np.asarray(level_probs, np.float64)
+        if p.shape[0] != num_levels:
+            raise ValueError(
+                f"level_probs has {p.shape[0]} levels, codec has "
+                f"{num_levels}")
+        joint = signed_symbol_probabilities(p)
+    joint = np.clip(joint, _PROB_FLOOR, None)
+    joint = joint / joint.sum()
+    lengths = huffman_code_lengths(joint)
+    if int(lengths.max()) > MAX_CODE_BITS:
+        # pathological skew: fall back to a fixed-width (still
+        # prefix-free) table rather than over-long codewords
+        from .packing import wire_bits_for
+        lengths = np.full(S, wire_bits_for(num_levels), np.int64)
+    codes = canonical_code(lengths)
+    return (tuple(int(x) for x in lengths),
+            tuple(int(x) for x in codes))
 
 
 def code_length_bound(

@@ -149,9 +149,12 @@ class SchemeState(NamedTuple):
     num_updates: jnp.ndarray
     # achievable entropy-coded wire bits/coord of the current grid, fit
     # from the stats of the last level update (H(L) + sign bits); starts
-    # at the fixed-width cost.  Reported next to the actual fixed-width
-    # cost in SyncMetrics.entropy_bits_per_coord.
-    entropy_bits: jnp.ndarray = 0.0
+    # at the fixed-width cost.  Reported next to the actual (measured)
+    # wire cost in SyncMetrics.entropy_bits_per_coord — and realized as
+    # bytes by core.codec.EntropyCodec.  The default is a float32
+    # SCALAR (not a Python float) so harnesses that construct the state
+    # positionally keep a uniform metric dtype.
+    entropy_bits: jnp.ndarray = jnp.float32(0.0)
 
 
 def default_update_schedule(total_steps: int) -> tuple[int, ...]:

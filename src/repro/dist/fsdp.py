@@ -23,6 +23,14 @@ planned over the whole shard.)
 Zero-padding is an exact fixed point of ENCODE/DECODE (sign 0 -> code 0),
 so padded master parameters never drift.
 
+The payload is moved generically (``jax.tree.map(transport.all_to_all,
+payload)``), so the backward carries whatever the codec lays out — for
+an ``EntropyCodec`` each round's chunks travel as per-bucket
+canonical-Huffman runs with the coded-length word in the bucket header
+(capacity-static arrays, so the ``k``-round overlap and the all-to-all
+shapes are unchanged), decoding bit-exact against the uniform codec
+(``tests/test_entropy_codec.py``).
+
 ``make_gather(algorithm=...)`` composes the backward with a stateful
 ``repro.compress`` algorithm: the reduce-scatter encodes
 ``cotangent + residual`` and the new error-feedback residual comes back

@@ -64,23 +64,37 @@ TWO_PHASE_BITS = 8
 class SyncMetrics(NamedTuple):
     """Per-step wire accounting, split by direction so asymmetric modes
     (two_phase: cheap reduce hop, 9-bit broadcast hop) are visible to
-    cost models (``repro.sim``) instead of one aggregate number."""
+    cost models (``repro.sim``) instead of one aggregate number.
+
+    The bits/coord fields are MEASURED for variable-volume codecs
+    (``WirePlan.variable``, the entropy-coded payload family): what the
+    per-bucket coded-length headers say actually needs to travel, not
+    the static worst-case plan.  For fixed-layout codecs measured ==
+    planned, bit for bit.
+
+    Defaulted fields are ``jnp.float32`` SCALARS, not Python floats, so
+    harnesses that build shard_map out_specs from ``metric_specs()``
+    see a uniform float32 metric dtype on every path (incl. the
+    no-update / stateless paths that never ``_replace`` them)."""
 
     comm_bits_per_coord: jnp.ndarray       # total = reduce + broadcast
     quant_error: jnp.ndarray  # local ||Q(g) - g||^2 (own encode)
     reduce_bits_per_coord: jnp.ndarray     # toward-aggregate hop (phase 1)
     broadcast_bits_per_coord: jnp.ndarray  # from-aggregate hop (phase 2 /
     #                                        the broadcast-all gather)
-    entropy_bits_per_coord: jnp.ndarray = 0.0  # achievable entropy-coded
-    #   cost of the CURRENT grid: H(L) + Pr(sym != 0) sign bits, fit at
-    #   the last level update (``SchemeState.entropy_bits``); fixed-width
-    #   wire bits until the first update.
-    residual_norm: jnp.ndarray = 0.0  # ||error-feedback residual|| after
-    #   this step's feedback (repro.compress); 0 for stateless algorithms.
-    kept_fraction: jnp.ndarray = 1.0  # coordinates on the wire / total
-    #   (static; < 1 only for the sparse payload family).  The EXACT
-    #   shipped sparse bits/coord are comm_bits_per_coord — every
-    #   WirePlan accounts indices + values + norms + alignment slop.
+    entropy_bits_per_coord: jnp.ndarray = jnp.float32(0.0)  # achievable
+    #   entropy-coded cost of the CURRENT grid: H(L) + Pr(sym != 0) sign
+    #   bits, fit at the last level update (``SchemeState
+    #   .entropy_bits``); fixed-width wire bits until the first update.
+    #   With the EntropyCodec this is the target the measured
+    #   comm_bits_per_coord converges onto.
+    residual_norm: jnp.ndarray = jnp.float32(0.0)  # ||error-feedback
+    #   residual|| after this step's feedback (repro.compress); 0 for
+    #   stateless algorithms.
+    kept_fraction: jnp.ndarray = jnp.float32(1.0)  # coordinates on the
+    #   wire / total (static; < 1 only for the sparse payload family).
+    #   The EXACT shipped sparse bits/coord are comm_bits_per_coord —
+    #   every WirePlan accounts indices + values + norms + alignment.
 
 
 # ---------------------------------------------------------------------------
@@ -100,8 +114,11 @@ def _allreduce_all_gather(flat, codec, levels, key, transport, use_pallas):
 
     own = jnp.take(per_worker, transport.rank(), axis=0)[:d]
     qerr = jnp.sum((own - flat) ** 2)
-    # the single gather IS the broadcast-all hop (paper Sec. 5)
-    bits = jnp.float32(plan.bits_per_coord)
+    # the single gather IS the broadcast-all hop (paper Sec. 5);
+    # variable-volume codecs report what their headers say this
+    # worker's payload actually ships, not the static capacity
+    bits = (codec.measured_bits_per_coord(payload, plan)
+            if plan.variable else jnp.float32(plan.bits_per_coord))
     return out, own, SyncMetrics(bits, qerr, jnp.float32(0.0), bits)
 
 
@@ -138,7 +155,9 @@ def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
     own = codec.decode(payload, levels, plan, shard=None,
                        use_pallas=use_pallas).reshape(-1)[:d]
     qerr = jnp.sum((own - flat) ** 2)
-    bits_reduce = jnp.float32(plan.bits_per_coord)
+    bits_reduce = (codec.measured_bits_per_coord(payload, plan)
+                   if plan.variable
+                   else jnp.float32(plan.bits_per_coord))
     bits_bcast = jnp.float32(
         32.0 * (plan2.code_words + plan2.norm_words) / d)
     return out, own, SyncMetrics(bits_reduce + bits_bcast, qerr,

@@ -48,7 +48,12 @@ def main():
     ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--update-at", default="2,10")
     ap.add_argument("--codec", default="uniform",
-                    choices=["uniform", "mixed_width"])
+                    choices=["uniform", "mixed_width", "entropy",
+                             "entropy:uniform"],
+                    help="wire codec: 'entropy' ships the entropy-coded "
+                         "payload family (cold-start canonical-Huffman "
+                         "table; bits/coord in the log is then the "
+                         "MEASURED coded volume)")
     ap.add_argument("--widths", default="",
                     help="comma per-bucket scheme bits for "
                          "--codec mixed_width (cyclic pattern; empty = "

@@ -33,8 +33,11 @@ from jax.sharding import PartitionSpec as P
 from repro import configs
 from repro.compress import CompressionAlgorithm, make_algorithm
 from repro.core.codec import (
+    EntropyCodec,
     GradientCodec,
     MixedWidthCodec,
+    codec_for_scheme,
+    entropy_codec_from_gradient,
     mixed_widths_from_gradient,
 )
 from repro.core.schemes import QuantScheme, SchemeState
@@ -69,7 +72,13 @@ class Scenario:
     sync_mode: str = "all_gather"       # allreduce topology wire mode
     server_bits: int | None = 8         # param_server downlink grid
     norm_dtype: str = "float32"
-    codec: str = "uniform"              # 'uniform' | 'mixed_width'
+    # 'uniform' | 'mixed_width' | 'entropy' (the entropy-coded payload
+    # family: canonical-Huffman table fit from a probe-step gradient's
+    # level occupancies, RE-fit at every level-update milestone so the
+    # table tracks the adapting grid — the measured wire bits/coord in
+    # the trajectory then converge onto the metered
+    # entropy_bits_per_coord)
+    codec: str = "uniform"
     # static per-bucket scheme-bits pattern for the mixed-width codec;
     # empty = derive from a probe-step bit assignment (assign_mixed_widths
     # on the probe gradient's bucket statistics, budget = scheme bits).
@@ -160,6 +169,22 @@ register(Scenario(
     schemes=("alq", "qsgdinf"),
     topologies=("allreduce", "param_server"),
     codec="mixed_width",
+))
+register(Scenario(
+    name="entropy_coded",
+    description="EntropyCodec end to end: the metered entropy cost "
+                "realized as actual coded bytes.  The canonical-Huffman "
+                "table is fit from a probe-step gradient and re-fit at "
+                "every level-update milestone; the cost model bills "
+                "makespan by the MEASURED per-bucket coded lengths, so "
+                "measured bits/coord drop below the fixed-width plan "
+                "and track entropy_bits_per_coord as the grid adapts.  "
+                "Error feedback stacks on top unchanged (the ef cells "
+                "are bit-exact with ef over the uniform codec).",
+    schemes=("alq",),
+    topologies=("allreduce", "param_server"),
+    compress=("plain", "ef"),
+    codec="entropy",
 ))
 register(Scenario(
     name="ef_vs_plain",
@@ -290,6 +315,11 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
             "psi": psi,
             "levels": scheme_state.levels,
             "entropy_bits_per_coord": scheme_state.entropy_bits,
+            # worker 0's shipped wire bits/coord (both directions):
+            # MEASURED from the coded-length headers for the entropy
+            # payload family, the static plan otherwise
+            "measured_bits_per_coord": jnp.asarray(
+                res.wire_bits_per_coord, jnp.float32)[0],
         }
         return (new_params, new_opt.mu, new_nu, new_opt.count,
                 scheme_state.levels, scheme_state.multiplier,
@@ -309,18 +339,17 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
                                      "sent_bytes", "recv_bytes",
                                      "server_bytes", "hops",
                                      "drift_mu", "drift_sigma", "psi",
-                                     "levels", "entropy_bits_per_coord")}),
+                                     "levels", "entropy_bits_per_coord",
+                                     "measured_bits_per_coord")}),
         check_vma=False)
     return jax.jit(smapped), ocfg
 
 
-def _probe_mixed_widths(model: Model, scheme: QuantScheme, mesh,
-                        params, batch, per_worker: int) -> tuple:
-    """Per-bucket bit assignment from worker 0's probe-step gradient:
-    one real backward on the first batch shard, then the shared
-    stats -> widths protocol (``codec.mixed_widths_from_gradient``) —
-    the static width pattern the whole cell then runs on.
-    """
+def _probe_gradient(model: Model, mesh, params, batch,
+                    per_worker: int) -> jnp.ndarray:
+    """Worker 0's probe-step gradient: one real backward on the first
+    batch shard — the raw material of every host-level codec fit (the
+    mixed-width bit assignment and the entropy-table refit)."""
     pspecs = model.param_specs()
 
     def gradf(p, ids, labels):
@@ -333,15 +362,37 @@ def _probe_mixed_widths(model: Model, scheme: QuantScheme, mesh,
         gradf, mesh=mesh, in_specs=(pspecs, P(), P()), out_specs=P(),
         check_vma=False))
     with jax.set_mesh(mesh):
-        flat = f(params, batch["ids"][:per_worker],
+        return f(params, batch["ids"][:per_worker],
                  batch["labels"][:per_worker])
+
+
+def _probe_mixed_widths(model: Model, scheme: QuantScheme, mesh,
+                        params, batch, per_worker: int) -> tuple:
+    """Per-bucket bit assignment from the probe gradient
+    (``codec.mixed_widths_from_gradient``) — the static width pattern
+    the whole cell then runs on."""
+    flat = _probe_gradient(model, mesh, params, batch, per_worker)
     return mixed_widths_from_gradient(flat, scheme)
+
+
+def _probe_entropy_codec(model: Model, scheme: QuantScheme, mesh,
+                         params, batch, per_worker: int,
+                         levels) -> EntropyCodec:
+    """Canonical-Huffman table from the probe gradient's level
+    occupancies at the CURRENT grid
+    (``codec.entropy_codec_from_gradient``)."""
+    flat = _probe_gradient(model, mesh, params, batch, per_worker)
+    return entropy_codec_from_gradient(flat, scheme, levels)
 
 
 def _make_cell_codec(scn: Scenario, scheme: QuantScheme, model: Model,
                      mesh, params, batch) -> GradientCodec | None:
     if scn.codec == "uniform" or not scheme.quantized:
         return None
+    if scn.codec == "entropy":
+        return _probe_entropy_codec(model, scheme, mesh, params, batch,
+                                    scn.batch_per_worker,
+                                    scheme.init_levels())
     if scn.codec != "mixed_width":
         raise ValueError(f"unknown scenario codec {scn.codec!r}")
     widths = scn.mixed_width_pattern or _probe_mixed_widths(
@@ -350,6 +401,42 @@ def _make_cell_codec(scn: Scenario, scheme: QuantScheme, model: Model,
                            norm_type=scheme.norm_type,
                            norm_dtype=scheme.norm_dtype,
                            widths=tuple(int(b) for b in widths))
+
+
+def _fixed_bits_per_coord(scn: Scenario, scheme: QuantScheme, topo: str,
+                          d: int) -> float:
+    """The fixed-width (uniform-codec) counterpart of the trajectory's
+    per-worker ``measured_bits_per_coord`` for this topology — the plan
+    an entropy-coded cell must beat.  Matches ``TopologyResult
+    .wire_bits_per_coord``'s direction accounting: the gather hop for
+    allreduce, uplink + downlink for param_server."""
+    if not scheme.quantized:
+        return 32.0
+    from repro.core.codec import requant_codec
+    from repro.dist import sync
+    uc = codec_for_scheme(scheme)
+    plan = uc.plan(d)
+    if topo == "param_server":
+        if scn.server_bits is None:
+            down = 32.0
+        else:
+            c2 = requant_codec(uc, scn.server_bits)
+            down = 8.0 * c2.plan_buckets(plan.nb).payload_bytes / d
+        return float(plan.bits_per_coord + down)
+    if topo == "ring":
+        M = scn.cluster.num_workers
+        splan = uc.plan(d, shards=M)
+        return float(2.0 * (M - 1) * splan.payload_bytes * 8.0 / d)
+    if scn.sync_mode == "two_phase":
+        # reduce hop (scheme grid, sharded) + 8-bit broadcast hop —
+        # the same two-hop sum _allreduce_two_phase reports
+        M = scn.cluster.num_workers
+        splan = uc.plan(d, shards=M)
+        p2 = requant_codec(uc, sync.TWO_PHASE_BITS).plan_buckets(
+            splan.shard_nb)
+        return float(splan.bits_per_coord
+                     + 32.0 * (p2.code_words + p2.norm_words) / d)
+    return float(plan.bits_per_coord)
 
 
 def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
@@ -385,14 +472,16 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
     cstep = jnp.zeros((M,), jnp.int32)
     cum_err = jnp.zeros((d,), jnp.float32)
 
-    # widths are static (trace-time) layout, so tracking drifting bucket
-    # stats happens at the HOST level: on every level-update milestone
-    # the probe protocol re-runs on the current parameters' gradient and
-    # the cell is re-built on the fresh assignment (same cadence as
-    # ``maybe_update_levels``)
+    # widths / entropy tables are static (trace-time) layout, so
+    # tracking drifting bucket stats happens at the HOST level: on every
+    # level-update milestone the probe protocol re-runs on the current
+    # parameters' gradient and the cell is re-built on the fresh
+    # assignment (same cadence as ``maybe_update_levels``)
     reassign = (scn.codec == "mixed_width" and scheme.quantized
                 and not scn.mixed_width_pattern)
+    refit_table = scn.codec == "entropy" and scheme.quantized
     width_reassignments: list[dict[str, Any]] = []
+    table_refits: list[dict[str, Any]] = []
 
     traj = []
     sim_time = 0.0
@@ -423,6 +512,27 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                 if changed:
                     codec = dataclasses.replace(
                         codec, widths=tuple(int(b) for b in new_widths))
+                    algo = make_algorithm(comp_spec, scheme, codec=codec)
+                    step_fn, _ = _build_cell_step(
+                        model, scheme, scn, topo, mesh, use_pallas, algo)
+            if refit_table and t in scn.update_milestones:
+                # the levels just adapted inside step_fn: re-fit the
+                # canonical-Huffman table to the NEW grid's occupancies
+                # on a fresh probe gradient and rebuild the cell on it
+                new_codec = _probe_entropy_codec(
+                    model, scheme, mesh, params, batch,
+                    scn.batch_per_worker, levels)
+                changed = (new_codec.huff_lengths != codec.huff_lengths
+                           or new_codec.huff_codes != codec.huff_codes)
+                table_refits.append({
+                    "step": t,
+                    "changed": changed,
+                    "max_code_bits": max(new_codec.huff_lengths),
+                    "code_lengths": [int(l)
+                                     for l in new_codec.huff_lengths],
+                })
+                if changed:
+                    codec = new_codec
                     algo = make_algorithm(comp_spec, scheme, codec=codec)
                     step_fn, _ = _build_cell_step(
                         model, scheme, scn, topo, mesh, use_pallas, algo)
@@ -457,6 +567,8 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                 "psi": float(m["psi"]),
                 "entropy_bits_per_coord": float(
                     m["entropy_bits_per_coord"]),
+                "measured_bits_per_coord": float(
+                    m["measured_bits_per_coord"]),
                 "levels": np.asarray(m["levels"]).tolist(),
                 "compute_ms": np.asarray(compute_ms).tolist(),
                 "active": [bool(a > 0) for a in active],
@@ -473,6 +585,9 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                        if isinstance(codec, MixedWidthCodec)
                        else float(scheme.bits)),
         "width_reassignments": width_reassignments,
+        "table_refits": table_refits,
+        "fixed_bits_per_coord": _fixed_bits_per_coord(scn, scheme, topo,
+                                                      d),
         "steps": traj,
         "totals": {
             "sim_time_ms": sim_time,

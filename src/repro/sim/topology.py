@@ -76,6 +76,12 @@ class TopologyResult(NamedTuple):
     own: jnp.ndarray | None = None  # (M, d) each worker's own lossy
     #   round trip Q(input) — the repro.compress feedback signal; only
     #   populated under run_topology(want_own=True)
+    wire_bits_per_coord: jnp.ndarray = jnp.float32(0.0)  # (M,) per-worker
+    #   shipped wire bits per original coordinate, summed over both
+    #   directions of the worker's own traffic — MEASURED for
+    #   variable-volume codecs (the entropy payload family), planned
+    #   otherwise.  What the entropy_coded scenario charts against the
+    #   metered entropy_bits_per_coord.
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +131,9 @@ def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
         hops = 1
     return TopologyResult(out, sent, recv, jnp.float32(0.0),
                           jnp.int32(hops), m.quant_error,
-                          own if want_own else None)
+                          own if want_own else None,
+                          jnp.asarray(m.comm_bits_per_coord,
+                                      jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +165,16 @@ def _topo_param_server(grads, scheme, state, key, active,
         w = active / jnp.maximum(jnp.sum(active), 1.0)
         agg = jnp.tensordot(w, per_worker, axes=(0, 0))  # (n,)
 
-    up = jnp.full((M,), plan.payload_bytes, jnp.float32)
+    # uplink bytes: what each worker's payload actually needs to ship —
+    # measured from the coded-length headers for variable-volume codecs
+    # (the entropy payload family), the static plan otherwise (the
+    # static branch keeps the pre-entropy accounting bit-identical)
+    if plan.variable:
+        up = jax.vmap(
+            lambda p: codec.measured_bits_per_coord(p, plan))(
+                payloads) * (d / 8.0)
+    else:
+        up = jnp.full((M,), plan.payload_bytes, jnp.float32)
     own = per_worker[:, :d]
     qerr = jnp.sum((own - grads) ** 2, axis=1)
 
@@ -181,7 +198,8 @@ def _topo_param_server(grads, scheme, state, key, active,
     server_bytes = jnp.sum(up) + M * down
     return TopologyResult(out, sent, recv, server_bytes,
                           jnp.int32(2), qerr,
-                          own if want_own else None)
+                          own if want_own else None,
+                          (up + down) * (8.0 / d))
 
 
 # ---------------------------------------------------------------------------
@@ -283,12 +301,16 @@ def _topo_ring(grads, scheme, state, key, active, *, codec, use_pallas,
 
             own = jnp.stack([own_worker(vb[w], w) for w in range(M)])
 
+    # ring hops re-encode value-space (codec.requantize), so there is no
+    # payload to read headers from: variable-volume codecs are billed at
+    # capacity here (the ring is not part of the entropy_coded scenario)
     chunk_bytes = plan.payload_bytes
     if not scheme.quantized:
         chunk_bytes = 4.0 * plan.shard_n
     vol = jnp.full((M,), 2.0 * (M - 1) * chunk_bytes, jnp.float32)
     return TopologyResult(out, vol, vol, jnp.float32(0.0),
-                          jnp.int32(2 * (M - 1)), qerr, own)
+                          jnp.int32(2 * (M - 1)), qerr, own,
+                          vol * (8.0 / d))
 
 
 # ---------------------------------------------------------------------------

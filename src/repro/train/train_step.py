@@ -32,15 +32,17 @@ from .optim import OptimConfig, OptState, apply_updates, init_opt_state
 class SyncMetricsLite(NamedTuple):
     """Wire metrics surfaced in real training logs — the same
     per-direction split + entropy + compression accounting ``repro.sim``
-    reports."""
+    reports.  Defaulted fields are float32 scalars (not Python floats)
+    so ``metric_specs()`` harnesses see one metric dtype on every
+    path."""
 
     comm_bits_per_coord: jnp.ndarray
     quant_error: jnp.ndarray
     reduce_bits_per_coord: jnp.ndarray
     broadcast_bits_per_coord: jnp.ndarray
     entropy_bits_per_coord: jnp.ndarray
-    residual_norm: jnp.ndarray = 0.0
-    kept_fraction: jnp.ndarray = 1.0
+    residual_norm: jnp.ndarray = jnp.float32(0.0)
+    kept_fraction: jnp.ndarray = jnp.float32(1.0)
 
 
 class TrainState(NamedTuple):
@@ -96,10 +98,12 @@ class TrainConfig:
     update_every: int = 10_000          # additionally every k steps
     use_pallas: bool = True
     microbatches: int = 1               # grad accumulation (activation mem)
-    # wire codec of the DP allreduce path ('uniform' | 'mixed_width').
-    # FSDP models configure their backward wire separately via
-    # ``Model(fsdp_codec=...)`` — train metrics report whichever codec
-    # actually ships.
+    # wire codec of the DP allreduce path ('uniform' | 'mixed_width' |
+    # 'entropy[:base]' — the entropy-coded payload family with the
+    # cold-start canonical-Huffman table; comm_bits_per_coord then
+    # reports the MEASURED coded volume).  FSDP models configure their
+    # backward wire separately via ``Model(fsdp_codec=...)`` — train
+    # metrics report whichever codec actually ships.
     codec: str = "uniform"
     # static per-bucket scheme-bits pattern for codec='mixed_width'
     # (tiled over the gradient's buckets; e.g. assign_mixed_widths

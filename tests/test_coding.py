@@ -1,19 +1,42 @@
 """Entropy coding: level-occupancy probabilities (Prop. 6) integrate to 1
 and match Monte Carlo; Huffman code is a valid optimal prefix code
-(H <= E[len] <= H+1, Thm 5); Thm 3's bound dominates the empirical bits."""
+(H <= E[len] <= H+1, Thm 5); Thm 3's bound dominates the empirical bits.
+
+Plus the property suite backing the EntropyCodec wire table
+(hypothesis, with the seeded-sweep fallback on the offline image):
+
+* Kraft EQUALITY for Huffman lengths of random ``TruncNormStats``
+  occupancies (a Huffman code is complete, not just prefix-free);
+* H(L) <= E[len] <= H(L) + 1 over the same random stats;
+* ``level_probabilities`` sums to 1 and is non-negative under
+  degenerate stats (sigma -> 0, single-level grids);
+* the canonical wire code (``canonical_code`` / ``entropy_table``) is
+  prefix-free over the signed-symbol alphabet, and the signed expansion
+  has entropy exactly H(L) + Pr(sym != 0).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline image: seeded-random fallback
+    from proptest_compat import given, settings
+    from proptest_compat import strategies as st
+
 from repro.core import (
     TruncNormStats,
+    canonical_code,
     code_length_bound,
     entropy_bits,
+    entropy_table,
     expected_bits_per_coordinate,
     expected_huffman_bits,
     huffman_code_lengths,
     level_probabilities,
     normalized_magnitudes,
+    signed_symbol_probabilities,
     stochastic_round,
     uniform_levels,
 )
@@ -69,6 +92,123 @@ def test_bits_per_coordinate_and_thm3_bound():
     bound = code_length_bound(levels, stats, d)
     # Thm 3 bound must dominate the empirical expectation
     assert bound >= bits * d
+
+
+# ---------------------------------------------------------------------------
+# property suite: random TruncNormStats -> occupancies -> Huffman
+# ---------------------------------------------------------------------------
+
+def _random_stats(mu, sigma, mu2, sigma2, w):
+    g = np.asarray([w, 1.0 - w], np.float32)
+    return TruncNormStats(
+        mu=jnp.asarray([mu, mu2], jnp.float32),
+        sigma=jnp.asarray([sigma, sigma2], jnp.float32),
+        gamma=jnp.asarray(g / g.sum(), jnp.float32),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(1, 4),
+       mu=st.floats(0.0, 0.9), sigma=st.floats(1e-3, 0.5),
+       mu2=st.floats(0.0, 0.9), sigma2=st.floats(1e-3, 0.5),
+       w=st.floats(0.05, 0.95))
+def test_huffman_kraft_equality_random_stats(bits, mu, sigma, mu2,
+                                             sigma2, w):
+    """Huffman codes are COMPLETE: sum 2^-len == 1 exactly (Kraft with
+    equality), for occupancies of arbitrary fitted mixtures."""
+    probs = np.asarray(level_probabilities(
+        uniform_levels(bits), _random_stats(mu, sigma, mu2, sigma2, w)))
+    lengths = huffman_code_lengths(probs)
+    kraft = sum(2.0 ** -int(l) for l in lengths)
+    assert abs(kraft - 1.0) < 1e-9, (probs, lengths)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(1, 4),
+       mu=st.floats(0.0, 0.9), sigma=st.floats(1e-3, 0.5),
+       mu2=st.floats(0.0, 0.9), sigma2=st.floats(1e-3, 0.5),
+       w=st.floats(0.05, 0.95))
+def test_huffman_within_one_bit_of_entropy_random_stats(bits, mu, sigma,
+                                                        mu2, sigma2, w):
+    """Thm 5: H(L) <= E[len] <= H(L) + 1 for random fitted mixtures."""
+    probs = np.asarray(level_probabilities(
+        uniform_levels(bits), _random_stats(mu, sigma, mu2, sigma2, w)))
+    H = float(entropy_bits(jnp.asarray(probs)))
+    E = expected_huffman_bits(probs)
+    assert H - 1e-6 <= E <= H + 1.0 + 1e-6, (H, E, probs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(1, 4), mu=st.floats(0.0, 1.0),
+       sigma=st.floats(1e-12, 1e-6))
+def test_level_probabilities_degenerate_sigma(bits, mu, sigma):
+    """sigma -> 0 collapses all mass onto (at most) two adjacent
+    levels; the closed form must stay a distribution: non-negative,
+    summing to 1, no NaNs."""
+    stats = TruncNormStats(
+        mu=jnp.asarray([mu], jnp.float32),
+        sigma=jnp.asarray([sigma], jnp.float32),
+        gamma=jnp.asarray([1.0], jnp.float32),
+    )
+    probs = np.asarray(level_probabilities(uniform_levels(bits), stats))
+    assert np.isfinite(probs).all(), probs
+    assert (probs >= 0.0).all(), probs
+    np.testing.assert_allclose(probs.sum(), 1.0, atol=1e-5)
+
+
+def test_level_probabilities_single_level_edge():
+    """A one-level grid has a deterministic symbol: Pr = (1,)."""
+    stats = stats_example()
+    probs = np.asarray(level_probabilities(
+        jnp.asarray([0.0], jnp.float32), stats))
+    np.testing.assert_allclose(probs, [1.0])
+    assert float(entropy_bits(jnp.asarray(probs))) == 0.0
+    assert list(huffman_code_lengths(probs)) == [1]
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(1, 4),
+       mu=st.floats(0.0, 0.9), sigma=st.floats(1e-3, 0.5),
+       mu2=st.floats(0.0, 0.9), sigma2=st.floats(1e-3, 0.5),
+       w=st.floats(0.05, 0.95))
+def test_wire_table_is_prefix_free(bits, mu, sigma, mu2, sigma2, w):
+    """The canonical wire code over the signed alphabet: no codeword is
+    a (LSB-first) prefix of another, and the table covers 2L-1
+    symbols."""
+    levels = uniform_levels(bits)
+    probs = np.asarray(level_probabilities(
+        levels, _random_stats(mu, sigma, mu2, sigma2, w)))
+    lengths, codes = entropy_table(probs, levels.shape[0])
+    S = 2 * levels.shape[0] - 1
+    assert len(lengths) == len(codes) == S
+    for i in range(S):
+        for j in range(S):
+            if i == j:
+                continue
+            if lengths[i] <= lengths[j]:
+                mask = (1 << lengths[i]) - 1
+                assert (codes[j] & mask) != codes[i], (i, j)
+
+
+def test_signed_symbol_entropy_is_H_plus_sign_bits():
+    """The joint signed alphabet's entropy equals the metered accounting
+    H(L) + Pr(sym != 0) exactly (signs are uniform given magnitude)."""
+    stats = stats_example()
+    levels = uniform_levels(3)
+    probs = np.asarray(level_probabilities(levels, stats))
+    joint = signed_symbol_probabilities(probs)
+    np.testing.assert_allclose(joint.sum(), 1.0, atol=1e-6)
+    H = float(entropy_bits(jnp.asarray(probs)))
+    Hj = float(entropy_bits(jnp.asarray(joint, jnp.float32)))
+    np.testing.assert_allclose(Hj, H + (1.0 - probs[0]), rtol=1e-5)
+
+
+def test_canonical_code_known_lengths():
+    """Textbook canonical assignment, bit-reversed for the LSB-first
+    wire: lengths (1, 2, 3, 3) -> MSB codes 0, 10, 110, 111."""
+    codes = canonical_code([1, 2, 3, 3])
+    # bit-reversed within length: 0 -> 0; 10 -> 01; 110 -> 011; 111 -> 111
+    assert list(codes) == [0b0, 0b01, 0b011, 0b111]
 
 
 def test_adaptive_levels_cost_fewer_bits_than_uniform_on_peaky_dist():
