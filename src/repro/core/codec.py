@@ -96,6 +96,14 @@ class WirePlan(NamedTuple):
     # the payload with ``codec.measured_bits_per_coord``.  For
     # ``variable=False`` codecs measured == planned by construction.
     variable: bool = False
+    # wire-integrity mode: the payload carries one checksum word per
+    # bucket (``packing.bucket_checksums`` over the bucket's symbols +
+    # norm bit pattern, laid at the head of each segment's word
+    # stream), and ``codec.decode_checked`` returns a per-stream
+    # per-bucket validity mask next to the values.  Off by default —
+    # the integrity-off layout is byte-identical to the pre-fault wire
+    # (pinned by the codec goldens).
+    integrity: bool = False
 
     @property
     def n(self) -> int:
@@ -147,6 +155,11 @@ class GradientCodec:
     bucket_size: int = 8192
     norm_type: str = "l2"
     norm_dtype: str = "float32"
+    # opt-in wire integrity: lay a per-bucket checksum word into the
+    # payload and expose ``decode_checked`` (values + validity mask).
+    # Supported by the dense single-alphabet codecs (uniform, entropy);
+    # mixed-width / sparse payload families raise.
+    integrity: bool = False
 
     @property
     def chunkable(self) -> bool:
@@ -219,6 +232,27 @@ class GradientCodec:
         """
         raise NotImplementedError
 
+    def decode_checked(self, payload: WirePayload, levels: jnp.ndarray,
+                       plan: WirePlan, *, shard=None,
+                       use_pallas: bool = True):
+        """``decode`` plus a per-stream per-bucket validity verdict.
+
+        Returns ``(vals, valid)`` where ``valid`` is a bool array of
+        shape ``(snb,)`` for a 1-D payload / ``(M, snb)`` for gathered
+        streams: ``True`` iff the bucket's wire words passed every
+        integrity check (checksum word, entropy header sanity).  For
+        ``plan.integrity=False`` codecs everything is vacuously valid
+        — this default keeps codecs without an integrity layout usable
+        behind the same call.
+        """
+        vals = self.decode(payload, levels, plan, shard=shard,
+                           use_pallas=use_pallas)
+        if payload.words.ndim == 1:
+            shape: tuple = (plan.shard_nb,)
+        else:
+            shape = (payload.words.shape[0], plan.shard_nb)
+        return vals, jnp.ones(shape, bool)
+
     def requantize(self, vb: jnp.ndarray, levels: jnp.ndarray,
                    key: jax.Array, plan: WirePlan, *, chunk: int = 0,
                    use_pallas: bool = True) -> jnp.ndarray:
@@ -283,11 +317,14 @@ class UniformCodec(GradientCodec):
         wb = packing.wire_bits_for(self.num_levels)
         snb = nb // shards
         cw = packing.packed_words(snb * self.bucket_size, wb)
+        if self.integrity:
+            cw += snb                     # per-bucket checksum words
         nw = packing.norm_words(snb, self.norm_dtype)
         return WirePlan(d=d, bucket_size=self.bucket_size, nb=nb,
                         shards=shards, code_words=cw, norm_words=nw,
                         widths=None,
-                        bits_per_coord=32.0 * shards * (cw + nw) / d)
+                        bits_per_coord=32.0 * shards * (cw + nw) / d,
+                        integrity=self.integrity)
 
     def encode(self, vb, levels, key, plan, *, use_pallas=True):
         from repro.kernels import ops
@@ -296,21 +333,33 @@ class UniformCodec(GradientCodec):
                                        norm_type=self.norm_type,
                                        use_pallas=use_pallas)
         L = levels.shape[0]
+        snb = plan.shard_nb
+        if self.integrity:
+            csum = packing.bucket_checksums(
+                packing.bias_codes(codes, L),
+                packing.norm_bit_patterns(norms, self.norm_dtype))
+
+        def seg_words(j):
+            w = packing.pack_signed(
+                jax.lax.slice_in_dim(codes, j * snb, (j + 1) * snb), L)
+            if self.integrity:
+                w = jnp.concatenate(
+                    [jax.lax.slice_in_dim(csum, j * snb, (j + 1) * snb),
+                     w])
+            return w
+
         if plan.shards == 1:
             return WirePayload(
-                words=packing.pack_signed(codes, L),
+                words=seg_words(0),
                 norm_words=packing.pack_norms(norms, self.norm_dtype))
-        snb = plan.shard_nb
-        words = jnp.stack([
-            packing.pack_signed(
-                jax.lax.slice_in_dim(codes, j * snb, (j + 1) * snb), L)
-            for j in range(plan.shards)])
+        words = jnp.stack([seg_words(j) for j in range(plan.shards)])
         nwords = jax.vmap(
             lambda x: packing.pack_norms(x, self.norm_dtype))(
                 norms.reshape(plan.shards, snb))
         return WirePayload(words=words, norm_words=nwords)
 
-    def decode(self, payload, levels, plan, *, shard=None, use_pallas=True):
+    def _decode_uniform(self, payload, levels, plan, use_pallas,
+                        want_valid):
         from repro.kernels import ops
         words, nwords = payload
         single = words.ndim == 1
@@ -318,15 +367,45 @@ class UniformCodec(GradientCodec):
             words, nwords = words[None], nwords[None]
         snb = plan.shard_nb
         n = plan.shard_n
+        stored = None
+        if plan.integrity:
+            stored = jax.lax.slice_in_dim(words, 0, snb, axis=1)
+            words = jax.lax.slice_in_dim(words, snb, words.shape[1],
+                                         axis=1)
         norms = _unpack_norm_rows(nwords, snb, self.norm_dtype)
         L = levels.shape[0]
         M = norms.shape[0]
-        sym = jax.vmap(lambda w: packing.unpack_signed(w, n, L))(words)
+        wb = packing.wire_bits_for(L)
+        usym = jax.vmap(lambda w: packing.unpack(w, n, wb))(words)
+        sym = packing.unbias_codes(usym, L)
         vals = ops.dequantize_op(
             sym.reshape(M * snb, self.bucket_size), norms.reshape(-1),
             levels, use_pallas=use_pallas)
         vals = vals.reshape(M, n)
-        return vals[0] if single else vals
+        valid = None
+        if want_valid:
+            if stored is None:
+                valid = jnp.ones((M, snb), bool)
+            else:
+                calc = jax.vmap(packing.bucket_checksums)(
+                    usym.reshape(M, snb, self.bucket_size),
+                    jax.vmap(lambda x: packing.norm_bit_patterns(
+                        x, self.norm_dtype))(norms))
+                valid = calc == stored
+        if single:
+            vals = vals[0]
+            valid = None if valid is None else valid[0]
+        return vals, valid
+
+    def decode(self, payload, levels, plan, *, shard=None, use_pallas=True):
+        vals, _ = self._decode_uniform(payload, levels, plan, use_pallas,
+                                       want_valid=False)
+        return vals
+
+    def decode_checked(self, payload, levels, plan, *, shard=None,
+                       use_pallas=True):
+        return self._decode_uniform(payload, levels, plan, use_pallas,
+                                    want_valid=True)
 
     def requantize(self, vb, levels, key, plan, *, chunk=0,
                    use_pallas=True):
@@ -440,12 +519,14 @@ class EntropyCodec(UniformCodec):
             d = nb * self.bucket_size
         snb = nb // shards
         cw = snb * (1 + self.cap_words)
+        if self.integrity:
+            cw += snb                     # per-bucket checksum words
         nw = packing.norm_words(snb, self.norm_dtype)
         return WirePlan(d=d, bucket_size=self.bucket_size, nb=nb,
                         shards=shards, code_words=cw, norm_words=nw,
                         widths=None,
                         bits_per_coord=32.0 * shards * (cw + nw) / d,
-                        variable=True)
+                        variable=True, integrity=self.integrity)
 
     # -- table as device constants ---------------------------------------
 
@@ -504,12 +585,19 @@ class EntropyCodec(UniformCodec):
         region = jnp.where(fallback[:, None], fixed, var)
 
         snb = plan.shard_nb
+        if self.integrity:
+            csum = packing.bucket_checksums(
+                sym, packing.norm_bit_patterns(norms, self.norm_dtype))
 
         def seg(s):
             h = jax.lax.slice_in_dim(header, s * snb, (s + 1) * snb)
             r = jax.lax.slice_in_dim(region, s * snb,
                                      (s + 1) * snb).reshape(-1)
-            return jnp.concatenate([h, r])
+            parts = [h, r]
+            if self.integrity:
+                parts.insert(0, jax.lax.slice_in_dim(
+                    csum, s * snb, (s + 1) * snb))
+            return jnp.concatenate(parts)
 
         if plan.shards == 1:
             return WirePayload(
@@ -521,11 +609,8 @@ class EntropyCodec(UniformCodec):
                 norms.reshape(plan.shards, snb))
         return WirePayload(words=words, norm_words=nwords)
 
-    def decode(self, payload, levels, plan, *, shard=None,
-               use_pallas=True):
-        # every segment has the same static layout, so `shard` (static
-        # or traced) never changes the decode — accepted for protocol
-        # compatibility, like SparseCodec
+    def _decode_entropy(self, payload, levels, plan, use_pallas,
+                        want_valid):
         from repro.kernels import ops
         words, nwords = payload
         single = words.ndim == 1
@@ -538,9 +623,15 @@ class EntropyCodec(UniformCodec):
         L = levels.shape[0]
         M = words.shape[0]
         norms = _unpack_norm_rows(nwords, snb, self.norm_dtype)
-        headers = jax.lax.slice_in_dim(words, 0, snb, axis=1)
+        stored = None
+        off = 0
+        if plan.integrity:
+            stored = jax.lax.slice_in_dim(words, 0, snb, axis=1)
+            off = snb
+        headers = jax.lax.slice_in_dim(words, off, off + snb, axis=1)
         regions = jax.lax.slice_in_dim(
-            words, snb, snb * (1 + cap), axis=1).reshape(M, snb, cap)
+            words, off + snb, off + snb * (1 + cap),
+            axis=1).reshape(M, snb, cap)
         fallback = (headers >> 31) > 0                  # (M, snb)
 
         # fixed-width path (vectorized; selected per bucket by the flag)
@@ -575,7 +666,45 @@ class EntropyCodec(UniformCodec):
             packing.unbias_codes(sym.reshape(M * snb, bs), L),
             norms.reshape(-1), levels, use_pallas=use_pallas)
         vals = vals.reshape(M, snb * bs)
-        return vals[0] if single else vals
+        valid = None
+        if want_valid:
+            if stored is None:
+                valid = jnp.ones((M, snb), bool)
+            else:
+                # checksum over the decoded symbols + norm bits ...
+                calc = jax.vmap(packing.bucket_checksums)(
+                    sym.astype(jnp.uint32),
+                    jax.vmap(lambda x: packing.norm_bit_patterns(
+                        x, self.norm_dtype))(norms))
+                valid = calc == stored
+                # ... AND header sanity: a fallback bucket's length is
+                # exactly the fixed-width run; a coded bucket's length
+                # fits its capacity.  (A corrupt header word can only
+                # inflate the billed volume or misroute the decode —
+                # both are caught here.)
+                used = headers & jnp.uint32(0x7FFFFFFF)
+                sane = jnp.where(fallback,
+                                 used == jnp.uint32(bs * wb),
+                                 used <= jnp.uint32(32 * cap))
+                valid = valid & sane
+        if single:
+            vals = vals[0]
+            valid = None if valid is None else valid[0]
+        return vals, valid
+
+    def decode(self, payload, levels, plan, *, shard=None,
+               use_pallas=True):
+        # every segment has the same static layout, so `shard` (static
+        # or traced) never changes the decode — accepted for protocol
+        # compatibility, like SparseCodec
+        vals, _ = self._decode_entropy(payload, levels, plan, use_pallas,
+                                       want_valid=False)
+        return vals
+
+    def decode_checked(self, payload, levels, plan, *, shard=None,
+                       use_pallas=True):
+        return self._decode_entropy(payload, levels, plan, use_pallas,
+                                    want_valid=True)
 
     # requantize: inherited from UniformCodec — the value-space round
     # trip is identical (entropy coding is lossless on the symbols).
@@ -585,11 +714,15 @@ class EntropyCodec(UniformCodec):
         if words.ndim == 1:
             words = words[None]
         snb = plan.shard_nb
-        headers = jax.lax.slice_in_dim(words, 0, snb, axis=1)
+        off = snb if plan.integrity else 0
+        headers = jax.lax.slice_in_dim(words, off, off + snb, axis=1)
         used = headers & jnp.uint32(0x7FFFFFFF)
+        # a corrupt header cannot bill more than the bucket's capacity
+        used = jnp.minimum(used, jnp.uint32(32 * self.cap_words))
         coded = jnp.sum((used + jnp.uint32(31)) >> 5)   # ceil words
+        overhead = snb + off                            # header (+ csum)
         total = (coded.astype(jnp.float32)
-                 + words.shape[0] * (snb + plan.norm_words))
+                 + words.shape[0] * (overhead + plan.norm_words))
         return 32.0 * total / plan.d
 
 
@@ -615,6 +748,7 @@ def entropy_wrap(base: GradientCodec, level_probs=None) -> EntropyCodec:
     return EntropyCodec(bucket_size=base.bucket_size,
                         norm_type=base.norm_type,
                         norm_dtype=base.norm_dtype,
+                        integrity=base.integrity,
                         num_levels=base.num_levels,
                         huff_lengths=lengths, huff_codes=codes)
 
@@ -734,6 +868,12 @@ class MixedWidthCodec(GradientCodec):
     widths: tuple = ()
 
     def __post_init__(self):
+        if self.integrity:
+            raise ValueError(
+                "MixedWidthCodec has no integrity layout (the ragged "
+                "width-group stream carries no per-bucket checksum "
+                "slot); use the uniform or entropy codec for "
+                "fault-tolerant wires")
         if not self.widths:
             raise ValueError("MixedWidthCodec needs a non-empty widths "
                              "pattern (per-bucket scheme bits)")
@@ -1013,11 +1153,13 @@ def requant_codec(codec: GradientCodec, bits: int) -> UniformCodec:
     return UniformCodec(num_levels=_num_levels_for_bits(bits),
                         bucket_size=codec.bucket_size,
                         norm_type=NORM_LINF,
-                        norm_dtype=codec.norm_dtype)
+                        norm_dtype=codec.norm_dtype,
+                        integrity=codec.integrity)
 
 
 def make_codec(scheme, kind: str = "uniform",
-               widths: tuple = ()) -> GradientCodec:
+               widths: tuple = (), *,
+               integrity: bool = False) -> GradientCodec:
     """Codec selection as configured on ``TrainConfig`` / sim scenarios.
 
     ``kind='mixed_width'`` with an empty ``widths`` falls back to the
@@ -1037,7 +1179,10 @@ def make_codec(scheme, kind: str = "uniform",
     scenario).
     """
     if kind == "uniform":
-        return codec_for_scheme(scheme)
+        codec = codec_for_scheme(scheme)
+        if integrity:
+            codec = dataclasses.replace(codec, integrity=True)
+        return codec
     if kind == "entropy" or kind.startswith("entropy:"):
         base_kind = kind.partition(":")[2] or "uniform"
         if base_kind != "uniform":
@@ -1045,8 +1190,16 @@ def make_codec(scheme, kind: str = "uniform",
                 f"entropy coding supports base codec 'uniform', got "
                 f"{base_kind!r} (mixed-width/sparse symbol streams are "
                 "not single-alphabet)")
-        return entropy_codec_for_scheme(scheme)
+        codec = entropy_codec_for_scheme(scheme)
+        if integrity:
+            codec = dataclasses.replace(codec, integrity=True)
+        return codec
     if kind == "mixed_width":
+        if integrity:
+            raise ValueError(
+                "integrity=True is not supported for codec kind "
+                "'mixed_width' (no per-bucket checksum slot in the "
+                "ragged width-group stream)")
         if not widths:
             if scheme.bits - 1 < 1 or scheme.bits + 1 > 8:
                 widths = (scheme.bits,)

@@ -126,6 +126,67 @@ def unpack_norms(words: jnp.ndarray, nb: int,
     raise ValueError(f"unknown norm_dtype {norm_dtype!r}; known: {NORM_DTYPES}")
 
 
+# ---------------------------------------------------------------------------
+# wire integrity words
+# ---------------------------------------------------------------------------
+
+# Mixing constants for the per-bucket integrity word (odd, so every
+# per-position multiplier is invertible mod 2^32: any single-symbol
+# change provably changes the weighted sum).
+_CSUM_SYM_MULT = 0x9E3779B1   # golden-ratio odd constant
+_CSUM_NORM_MULT = 0x85EBCA6B  # Murmur3 fmix constant
+# Nonzero offset so the ALL-ZERO payload (a dropped/zeroed wire row:
+# symbols 0, norm bits 0, stored checksum word 0) does NOT checksum to
+# 0 — zero rows are detected as invalid instead of decoding as a
+# "valid" zero bucket.
+_CSUM_OFFSET = 0x6A09E667
+
+
+def norm_bit_patterns(norms: jnp.ndarray,
+                      norm_dtype: str = "float32") -> jnp.ndarray:
+    """Per-bucket wire bit pattern of each norm, as uint32.
+
+    This is what the integrity word covers for the norm side-channel:
+    the exact bits that travel (fp16 norms contribute their 16-bit
+    pattern), so recomputing it from DECODED norms matches iff the norm
+    words arrived intact.  fp32 decoded norms round-trip to fp16
+    exactly (they were produced by an exact upcast).
+    """
+    norms = norms.reshape(-1)
+    if norm_dtype == "float32":
+        return jax.lax.bitcast_convert_type(norms.astype(jnp.float32),
+                                            jnp.uint32)
+    if norm_dtype == "float16":
+        return jax.lax.bitcast_convert_type(
+            norms.astype(jnp.float16), jnp.uint16).astype(jnp.uint32)
+    raise ValueError(f"unknown norm_dtype {norm_dtype!r}; known: {NORM_DTYPES}")
+
+
+def bucket_checksums(symbols: jnp.ndarray,
+                     norm_bits: jnp.ndarray) -> jnp.ndarray:
+    """(nb, bucket_size) unsigned symbols + (nb,) norm bit patterns ->
+    (nb,) uint32 integrity words.
+
+    A position-weighted sum with distinct ODD multipliers per
+    coordinate (so any single-symbol change flips the sum with
+    certainty; independent multi-word corruption escapes with
+    probability ~2^-32), mixed with an xorshift-multiply avalanche.
+    Fully vectorized — no scan — so the integrity pass costs one
+    elementwise multiply-reduce per bucket.
+    """
+    sym = symbols.astype(jnp.uint32)
+    bs = sym.shape[-1]
+    i = jnp.arange(bs, dtype=jnp.uint32)
+    mult = (jnp.uint32(2) * i + jnp.uint32(1)) * jnp.uint32(_CSUM_SYM_MULT)
+    h = jnp.sum(sym * mult[None, :], axis=-1, dtype=jnp.uint32)
+    h = h + norm_bits.astype(jnp.uint32) * jnp.uint32(_CSUM_NORM_MULT)
+    h = h + jnp.uint32(_CSUM_OFFSET)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> jnp.uint32(15))
+    return h
+
+
 def pack_signed(signed_codes: jnp.ndarray, num_levels: int) -> jnp.ndarray:
     bits = wire_bits_for(num_levels)
     return pack(bias_codes(signed_codes, num_levels), bits)

@@ -14,7 +14,7 @@ The payload layout itself lives in ``repro.core.codec``; its public API
 is re-exported here because the codec IS the wire contract of this
 package.
 """
-from . import fsdp, sync, transport  # noqa: F401
+from . import faults, fsdp, sync, transport  # noqa: F401
 from repro.core.codec import (  # noqa: F401
     GradientCodec,
     MixedWidthCodec,
@@ -32,6 +32,11 @@ from .sync import (  # noqa: F401
     gather_stats,
     maybe_update_levels,
     quantized_allreduce,
+)
+from .faults import (  # noqa: F401
+    FaultModel,
+    FaultyTransport,
+    faulty,
 )
 from .transport import (  # noqa: F401
     MaskedTransport,

@@ -1,0 +1,213 @@
+"""Fault injection for the quantized collective wire.
+
+``FaultModel`` is the declarative fault configuration shared by the
+transport wrapper here and the cluster simulator's crash/rejoin model
+(``sim.cluster``): word-level bit corruption, whole-payload drop and
+delivery delay on the wire, and the per-worker crash/rejoin Markov
+chain the simulator steps between rounds.
+
+``FaultyTransport`` wraps any ``dist.transport.Transport`` and injects
+faults into the GATHERED uint32 wire words — after the collective, on
+the replicated (M, ...) view every worker holds — so the *real*
+ENCODE -> collective -> DECODE path of ``dist.sync`` runs under faults
+with no wire-mode changes.  Injection is deterministic in
+``(model.seed, step, worker-row, leaf)``: every worker derives the same
+corruption from the same replicated key, which keeps aggregates
+replicated (the corruption is "sender-side" — all receivers see the
+same corrupted bytes), keeps runs reproducible, and follows the same
+seeding discipline as ``sim.cluster.sample_step``.
+
+What a fault does to the step:
+
+* a *bit flip* corrupts one bit of one packed word.  Without
+  ``integrity=`` plans it silently decodes to a wrong gradient (that is
+  the point — the brittleness being tested); with integrity on,
+  ``decode_checked`` flags the bucket and ``dist.sync`` excludes it.
+* a *drop* zeroes a worker's whole payload row.  An all-zero row fails
+  every bucket checksum (``packing._CSUM_OFFSET``), so integrity-on
+  sync excludes the worker exactly like a ``MaskedTransport`` mask.
+* a *delay* makes the payload miss the step's aggregation window: on
+  the wire it acts like a drop for THIS step, and the cluster cost
+  model additionally bills ``delay_ms`` to the round.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .transport import Transport
+
+# domain-separation constants for the per-step fault key
+_FOLD_STEP = 0xFA17
+_FOLD_DROP = 0xD209
+_FOLD_DELAY = 0xDE1A
+
+
+def _check_prob(name: str, p) -> None:
+    vals = p if isinstance(p, tuple) else (p,)
+    bad = [float(v) for v in vals if not 0.0 <= float(v) <= 1.0]
+    if bad:
+        raise ValueError(f"{name} must be in [0, 1], got {bad}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Declarative fault configuration (all probabilities per step).
+
+    ``flip_prob`` is the per-WORD bit-flip probability on gathered wire
+    words — a float, or a per-worker tuple to target specific workers
+    (e.g. ``(0.0, 0.0, 1.0, 0.0)`` corrupts only worker 2's payload).
+    ``drop_prob`` / ``delay_prob`` drop or delay whole per-worker
+    payloads; a delayed payload misses the step (drop semantics on the
+    wire) and bills ``delay_ms`` in the cluster cost model.
+    ``crash_prob`` / ``rejoin_prob`` parameterize the per-worker
+    up/down Markov chain stepped by ``sim.cluster`` — a crashed worker
+    is absent for whole steps and rejoins with a stale payload.
+    """
+
+    flip_prob: float | tuple = 0.0
+    drop_prob: float = 0.0
+    delay_prob: float = 0.0
+    delay_ms: float = 5.0
+    crash_prob: float = 0.0
+    rejoin_prob: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        _check_prob("flip_prob", self.flip_prob)
+        for f in ("drop_prob", "delay_prob", "crash_prob", "rejoin_prob"):
+            _check_prob(f, getattr(self, f))
+        if self.delay_ms < 0:
+            raise ValueError(f"delay_ms must be >= 0, got {self.delay_ms}")
+
+    @property
+    def any_wire_faults(self) -> bool:
+        flips = (self.flip_prob if isinstance(self.flip_prob, tuple)
+                 else (self.flip_prob,))
+        return (any(float(p) > 0 for p in flips)
+                or self.drop_prob > 0 or self.delay_prob > 0)
+
+    def flip_probs(self, M: int) -> jnp.ndarray:
+        """(M,) per-worker word-corruption probabilities."""
+        if isinstance(self.flip_prob, tuple):
+            if len(self.flip_prob) != M:
+                raise ValueError(
+                    f"flip_prob tuple has {len(self.flip_prob)} entries "
+                    f"for {M} workers")
+            return jnp.asarray(self.flip_prob, jnp.float32)
+        return jnp.full((M,), float(self.flip_prob), jnp.float32)
+
+    def key_for_step(self, step) -> jax.Array:
+        """The replicated per-step fault key: (seed, step) -> key, same
+        discipline as the cluster sampler (worker distinction comes from
+        the row axis of the sampled masks, not from per-worker keys)."""
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), _FOLD_STEP),
+            step)
+
+    def delayed_workers(self, step, M: int) -> jnp.ndarray:
+        """(M,) bool: the step's delay draws.  Same key and draw as
+        ``FaultyTransport.drop_mask``'s delay half, so the host-side
+        cost model bills ``delay_ms`` for exactly the payloads the wire
+        treated as late."""
+        kl = jax.random.fold_in(self.key_for_step(step), _FOLD_DELAY)
+        return jax.random.uniform(kl, (M,)) < jnp.float32(self.delay_prob)
+
+
+class FaultyTransport(Transport):
+    """Transport wrapper injecting wire faults into gathered payloads.
+
+    Wraps an inner transport (mesh, masked, ...) and corrupts the
+    uint32 rows coming out of ``all_gather`` / ``all_to_all``:
+    per-word bit flips, then whole-row zeroing for dropped/delayed
+    workers.  Aggregation rules (``weights`` / ``active_vector`` /
+    ``mean_workers*``) delegate to the inner transport, so dropout
+    masking composes with fault injection unchanged.
+    """
+
+    def __init__(self, inner: Transport, model: FaultModel,
+                 key: jax.Array):
+        super().__init__(inner.axes)
+        self.inner = inner
+        self.model = model
+        self.key = key
+
+    # ---- delegation -----------------------------------------------------
+
+    def size(self):
+        return self.inner.size()
+
+    def rank(self):
+        return self.inner.rank()
+
+    def psum(self, x):
+        return self.inner.psum(x)
+
+    def weights(self):
+        return self.inner.weights()
+
+    def active_vector(self):
+        return self.inner.active_vector()
+
+    def mean_workers(self, stacked):
+        return self.inner.mean_workers(stacked)
+
+    def mean_workers_bucketed(self, stacked, valid, bucket_size):
+        return self.inner.mean_workers_bucketed(stacked, valid,
+                                                bucket_size)
+
+    def mean_psum(self, x):
+        # fp32 side-band values (stats merges, fp32 mode) are not wire
+        # payloads; they pass through un-faulted.
+        return self.inner.mean_psum(x)
+
+    # ---- fault injection ------------------------------------------------
+
+    def drop_mask(self) -> jnp.ndarray:
+        """(M,) bool: workers whose payload misses this step (dropped
+        or delayed past the aggregation window).  Shared across payload
+        leaves so a worker loses its WHOLE payload, not one leaf."""
+        M = self.size()
+        kd = jax.random.fold_in(self.key, _FOLD_DROP)
+        dropped = (jax.random.uniform(kd, (M,))
+                   < jnp.float32(self.model.drop_prob))
+        kl = jax.random.fold_in(self.key, _FOLD_DELAY)
+        delayed = (jax.random.uniform(kl, (M,))
+                   < jnp.float32(self.model.delay_prob))
+        return dropped | delayed
+
+    def _inject(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """Corrupt gathered uint32 rows: (M, ...) -> (M, ...)."""
+        if rows.dtype != jnp.uint32:
+            return rows
+        M = rows.shape[0]
+        bcast = (M,) + (1,) * (rows.ndim - 1)
+        # leaf distinction: fold in the trailing word count (a static
+        # layout fact), never a mutable counter — retrace-safe and
+        # identical on every worker.
+        leaf_key = jax.random.fold_in(self.key, rows.shape[-1])
+        ku, kb = jax.random.split(leaf_key)
+        u = jax.random.uniform(ku, rows.shape)
+        flip = u < self.model.flip_probs(M).reshape(bcast)
+        bit = jax.random.randint(kb, rows.shape, 0, 32,
+                                 jnp.int32).astype(jnp.uint32)
+        rows = jnp.where(flip, rows ^ (jnp.uint32(1) << bit), rows)
+        return jnp.where(self.drop_mask().reshape(bcast),
+                         jnp.uint32(0), rows)
+
+    def all_gather(self, x):
+        return self._inject(self.inner.all_gather(x))
+
+    def all_to_all(self, x):
+        return self._inject(self.inner.all_to_all(x))
+
+
+def faulty(transport: Transport, model: FaultModel | None,
+           step) -> Transport:
+    """Wrap ``transport`` in the model's wire faults for one step
+    (identity when the model is absent or injects nothing)."""
+    if model is None or not model.any_wire_faults:
+        return transport
+    return FaultyTransport(transport, model, model.key_for_step(step))

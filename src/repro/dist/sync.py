@@ -95,6 +95,13 @@ class SyncMetrics(NamedTuple):
     #   wire / total (static; < 1 only for the sparse payload family).
     #   The EXACT shipped sparse bits/coord are comm_bits_per_coord —
     #   every WirePlan accounts indices + values + norms + alignment.
+    corrupt_fraction: jnp.ndarray = jnp.float32(0.0)  # fraction of
+    #   gathered (worker, bucket) wire slots that FAILED an integrity
+    #   check this step and were excluded from the aggregate; always 0
+    #   without ``integrity=`` plans (nothing is checked).
+    excluded_workers: jnp.ndarray = jnp.float32(0.0)  # workers whose
+    #   ENTIRE payload failed integrity (dropped/zeroed rows) — they
+    #   aggregate exactly like a MaskedTransport-masked worker.
 
 
 # ---------------------------------------------------------------------------
@@ -108,18 +115,38 @@ def _allreduce_all_gather(flat, codec, levels, key, transport, use_pallas):
     payload = codec.encode(vb, levels, key, plan, use_pallas=use_pallas)
 
     gathered = jax.tree.map(transport.all_gather, payload)   # (M, ...)
-    per_worker = codec.decode(gathered, levels, plan,
-                              use_pallas=use_pallas)          # (M, n)
-    out = transport.mean_workers(per_worker)[:d]
-
-    own = jnp.take(per_worker, transport.rank(), axis=0)[:d]
+    if plan.integrity:
+        # checked decode: per-(worker, bucket) validity verdicts, with
+        # detected-corrupt buckets excluded from the aggregate by the
+        # per-bucket renormalization rule (a fully-invalid worker
+        # aggregates bit-exactly like a transport-masked one).  ``own``
+        # comes from the LOCAL payload, not the gathered row — wire
+        # corruption of one's own row must not poison the error-
+        # feedback residual (bit-identical when the wire is clean).
+        per_worker, valid = codec.decode_checked(gathered, levels, plan,
+                                                 use_pallas=use_pallas)
+        out = transport.mean_workers_bucketed(
+            per_worker, valid, plan.bucket_size)[:d]
+        own = codec.decode(payload, levels, plan,
+                           use_pallas=use_pallas)[:d]
+        corrupt = jnp.mean(1.0 - valid.astype(jnp.float32))
+        excluded = jnp.sum(jnp.all(~valid, axis=1).astype(jnp.float32))
+    else:
+        per_worker = codec.decode(gathered, levels, plan,
+                                  use_pallas=use_pallas)      # (M, n)
+        out = transport.mean_workers(per_worker)[:d]
+        own = jnp.take(per_worker, transport.rank(), axis=0)[:d]
+        corrupt = jnp.float32(0.0)
+        excluded = jnp.float32(0.0)
     qerr = jnp.sum((own - flat) ** 2)
     # the single gather IS the broadcast-all hop (paper Sec. 5);
     # variable-volume codecs report what their headers say this
     # worker's payload actually ships, not the static capacity
     bits = (codec.measured_bits_per_coord(payload, plan)
             if plan.variable else jnp.float32(plan.bits_per_coord))
-    return out, own, SyncMetrics(bits, qerr, jnp.float32(0.0), bits)
+    return out, own, SyncMetrics(bits, qerr, jnp.float32(0.0), bits,
+                                 corrupt_fraction=corrupt,
+                                 excluded_workers=excluded)
 
 
 def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
@@ -133,10 +160,21 @@ def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
     if M == 1:  # unsharded payload is 1-D; the wire still sees one row
         payload = jax.tree.map(lambda a: a[None], payload)
     received = jax.tree.map(transport.all_to_all, payload)
-    shard_per_worker = codec.decode(received, levels, plan,
-                                    shard=transport.rank(),
-                                    use_pallas=use_pallas)   # (M, shard_n)
-    shard_mean = transport.mean_workers(shard_per_worker)
+    corrupt = jnp.float32(0.0)
+    excluded = jnp.float32(0.0)
+    if plan.integrity:
+        shard_per_worker, valid1 = codec.decode_checked(
+            received, levels, plan, shard=transport.rank(),
+            use_pallas=use_pallas)                           # (M, shard_n)
+        shard_mean = transport.mean_workers_bucketed(
+            shard_per_worker, valid1, plan.bucket_size)
+        corrupt = corrupt + jnp.sum(1.0 - valid1.astype(jnp.float32))
+        excluded = jnp.sum(jnp.all(~valid1, axis=1).astype(jnp.float32))
+    else:
+        shard_per_worker = codec.decode(received, levels, plan,
+                                        shard=transport.rank(),
+                                        use_pallas=use_pallas)
+        shard_mean = transport.mean_workers(shard_per_worker)
     shard_mean = shard_mean.reshape(plan.shard_nb, plan.bucket_size)
 
     # ---- phase 2: re-quantize the aggregate, broadcast compressed ----
@@ -147,7 +185,21 @@ def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
                          jax.random.fold_in(key, 0x2FA5E), plan2,
                          use_pallas=use_pallas)
     g2 = jax.tree.map(transport.all_gather, pay2)
-    out = codec2.decode(g2, lv2, plan2, use_pallas=use_pallas)
+    if plan2.integrity:
+        # phase 2 carries each shard of the aggregate exactly once —
+        # no redundancy to renormalize over, so a detected-corrupt
+        # phase-2 bucket zero-fills (skips the coordinate this step)
+        out, valid2 = codec2.decode_checked(g2, lv2, plan2,
+                                            use_pallas=use_pallas)
+        # where, not multiply: corrupt buckets can decode to NaN and
+        # NaN * 0 would leak into the skipped coordinates
+        out = jnp.where(valid2[..., None],
+                        out.reshape(M, plan2.nb, plan2.bucket_size), 0.0)
+        corrupt = corrupt + jnp.sum(1.0 - valid2.astype(jnp.float32))
+        denom = jnp.float32(valid1.size + valid2.size)
+        corrupt = corrupt / denom
+    else:
+        out = codec2.decode(g2, lv2, plan2, use_pallas=use_pallas)
     out = out.reshape(-1)[:d]
 
     # own phase-1 payload, decoded shard by shard, for the error metric
@@ -161,7 +213,9 @@ def _allreduce_two_phase(flat, codec, levels, key, transport, use_pallas):
     bits_bcast = jnp.float32(
         32.0 * (plan2.code_words + plan2.norm_words) / d)
     return out, own, SyncMetrics(bits_reduce + bits_bcast, qerr,
-                                 bits_reduce, bits_bcast)
+                                 bits_reduce, bits_bcast,
+                                 corrupt_fraction=corrupt,
+                                 excluded_workers=excluded)
 
 
 def quantized_allreduce(

@@ -86,6 +86,14 @@ class Transport:
         M = self.size()
         return jnp.full((M,), 1.0 / M, jnp.float32)
 
+    def active_vector(self) -> jnp.ndarray:
+        """(M,) raw per-worker delivery weights BEFORE renormalization
+        (1.0 everywhere for the plain transports).  The per-bucket
+        exclusion rule (``mean_workers_bucketed``) renormalizes from
+        this so its float ops match ``MaskedTransport.weights`` exactly
+        when the validity mask is constant across buckets."""
+        return jnp.ones((self.size(),), jnp.float32)
+
     def mean_workers(self, stacked: jnp.ndarray) -> jnp.ndarray:
         """Mean over the leading (worker) axis of gathered payloads.
 
@@ -94,6 +102,28 @@ class Transport:
         pins this exact float reduction order.
         """
         return stacked.mean(0)
+
+    def mean_workers_bucketed(self, stacked: jnp.ndarray,
+                              valid: jnp.ndarray,
+                              bucket_size: int) -> jnp.ndarray:
+        """Per-bucket masked mean over workers: ``stacked`` is (M, n)
+        gathered values, ``valid`` an (M, nb) bool mask of buckets that
+        passed integrity checks; detected-corrupt buckets are excluded
+        and the rest renormalized, per bucket, with the SAME formula as
+        ``MaskedTransport.weights`` (``a / max(sum(a), 1.0)`` from the
+        raw active vector) so a worker whose every bucket is invalid
+        aggregates bit-exactly like one masked out at the transport.
+        An all-invalid bucket aggregates to 0 (dropped coordinate).
+        """
+        M = stacked.shape[0]
+        nb = valid.shape[1]
+        a = self.active_vector()[:, None] * valid.astype(jnp.float32)
+        w = a / jnp.maximum(jnp.sum(a, axis=0), 1.0)      # (M, nb)
+        vb = stacked.reshape(M, nb, bucket_size)
+        # corrupted buckets can decode to NaN/Inf (corrupt norm words);
+        # their weight is 0 but 0 * NaN = NaN, so zero the values too
+        vb = jnp.where(valid[:, :, None], vb, 0.0)
+        return jnp.einsum("mb,mbc->bc", w, vb).reshape(-1)
 
     def mean_psum(self, x: jnp.ndarray) -> jnp.ndarray:
         """fp32 mean-allreduce of per-worker local values."""
@@ -125,6 +155,9 @@ class MaskedTransport(Transport):
     def weights(self) -> jnp.ndarray:
         total = jnp.maximum(jnp.sum(self.active), 1.0)
         return self.active / total
+
+    def active_vector(self) -> jnp.ndarray:
+        return self.active
 
     def mean_workers(self, stacked: jnp.ndarray) -> jnp.ndarray:
         return jnp.tensordot(self.weights(), stacked, axes=(0, 0))

@@ -29,6 +29,19 @@ from repro.train.train_step import (
     make_train_step, metric_specs)
 
 
+def resume_state(ckpt_dir: str, state):
+    """Auto-resume: (start_step, state) from the newest checkpoint in
+    ``ckpt_dir`` (the FULL TrainState — optimizer moments, adapted
+    levels, EF residual and all), or (0, state) for a fresh start."""
+    found = checkpoint.restore_latest(ckpt_dir, state)
+    if found is None:
+        return 0, state
+    step, restored = found
+    print(f"resumed step {step} from "
+          f"{checkpoint.step_path(ckpt_dir, step)}", flush=True)
+    return step + 1, restored
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-proxy")
@@ -62,7 +75,18 @@ def main():
                     help="compression algorithm around the codec "
                          "(repro.compress): plain | ef[:warmup] | "
                          "topk[:k]")
+    ap.add_argument("--integrity", action="store_true", default=False,
+                    help="lay per-bucket checksum words into the wire "
+                         "payload; detected-corrupt buckets are "
+                         "excluded from the aggregate")
     ap.add_argument("--save", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint directory: enables periodic "
+                         "TrainState saves and auto-resume from the "
+                         "newest step_*.npz on restart")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="save the full TrainState to --ckpt-dir every "
+                         "N steps (0 = only at the end)")
     ap.add_argument("--use-pallas", action="store_true", default=False)
     args = ap.parse_args()
 
@@ -86,7 +110,8 @@ def main():
         codec=args.codec,
         mixed_width_pattern=tuple(
             int(x) for x in args.widths.split(",") if x),
-        compress=args.compress)
+        compress=args.compress,
+        integrity=args.integrity)
     step_fn = make_train_step(model, tcfg, data_axes=data_axes)
 
     pipe = Pipeline(DataConfig(kind="markov", vocab_size=cfg.vocab_size,
@@ -108,9 +133,16 @@ def main():
         train = jax.jit(jax.shard_map(step_fn, in_specs=in_specs,
                                       out_specs=(sspecs, mspecs),
                                       check_vma=False))
+        start = 0
+        if args.ckpt_dir:
+            start, state = resume_state(args.ckpt_dir, state)
         t0 = time.time()
-        for t in range(args.steps):
+        for t in range(start, args.steps):
             state, metrics = train(state, pipe.batch(t))
+            if args.ckpt_dir and (
+                    (args.save_every > 0 and (t + 1) % args.save_every == 0)
+                    or t == args.steps - 1):
+                checkpoint.save_step(args.ckpt_dir, t, state)
             if t % 5 == 0 or t == args.steps - 1:
                 extra = ("" if args.compress == "plain" else
                          f" |e|={float(metrics['residual_norm']):.3f}"

@@ -12,7 +12,14 @@ wall-clock, and gradient-statistics drift.
 See docs/simulator.md for topologies, the cost model, and the JSON
 schema.
 """
-from .cluster import ClusterConfig, sample_step, step_time_ms  # noqa: F401
+from .cluster import (  # noqa: F401
+    ClusterConfig,
+    ClusterState,
+    init_cluster_state,
+    sample_step,
+    step_faults,
+    step_time_ms,
+)
 from .scenario import SCENARIOS, Scenario, register, run_scenario  # noqa: F401
 from .topology import (  # noqa: F401
     SIM_AXIS,

@@ -50,6 +50,21 @@ class ClusterConfig:
         if self.straggler_scale < 1.0:
             raise ValueError("straggler_scale must be >= 1 (it multiplies "
                              "compute time)")
+        for f in ("straggler_prob", "dropout_prob"):
+            p = getattr(self, f)
+            if not 0.0 <= float(p) <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1], got {p}")
+        if not np.isscalar(self.bandwidth_gbps):
+            if len(self.bandwidth_gbps) == 0:
+                raise ValueError(
+                    "bandwidth_gbps tuple must be non-empty (it is "
+                    "cycled over workers)")
+            bad = [b for b in self.bandwidth_gbps if float(b) <= 0]
+            if bad:
+                raise ValueError(f"bandwidth_gbps must be > 0, got {bad}")
+        elif float(self.bandwidth_gbps) <= 0:
+            raise ValueError("bandwidth_gbps must be > 0, got "
+                             f"{self.bandwidth_gbps}")
 
 
 def worker_bandwidths(cfg: ClusterConfig) -> np.ndarray:
@@ -93,6 +108,77 @@ def sample_step(cfg: ClusterConfig, step: int):
     active = (u_drop >= cfg.dropout_prob).astype(np.float32)
     active[0] = 1.0
     return compute, active
+
+
+# ---------------------------------------------------------------------------
+# crash / rejoin: the per-worker up/down Markov chain
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClusterState:
+    """Mutable cross-step cluster state: which workers are up, and for
+    how many consecutive steps the down ones have been down (the
+    staleness of the payload they will rejoin with)."""
+
+    up: np.ndarray           # (M,) bool
+    down_steps: np.ndarray   # (M,) int
+
+
+def init_cluster_state(num_workers: int) -> ClusterState:
+    return ClusterState(up=np.ones(num_workers, bool),
+                        down_steps=np.zeros(num_workers, np.int64))
+
+
+def step_faults(faults, state: ClusterState, step: int):
+    """Advance the crash/rejoin Markov chain one step.
+
+    ``faults`` is a ``dist.faults.FaultModel`` (``crash_prob`` /
+    ``rejoin_prob`` / ``seed``); draws are host-side numpy seeded from
+    ``(faults.seed, step)`` — deterministic, same discipline as
+    ``sample_step``.  Worker 0 never crashes (the cluster always has a
+    survivor, matching the dropout model).
+
+    Returns ``(new_state, weight, events)``:
+
+    * ``weight`` is the (M,) float contribution weight for THIS step:
+      1.0 for a healthy worker, 0.0 while down, and the staleness
+      weight ``1 / (1 + k)`` on the step a worker rejoins after ``k``
+      steps down — its payload is a stale gradient, down-weighted in
+      the ``MaskedTransport`` renormalization (the first slice of the
+      async/decentralized aggregation story).
+    * ``events`` is a JSON-ready list of this step's transitions.
+    """
+    M = state.up.shape[0]
+    rng = np.random.default_rng(
+        np.random.SeedSequence([faults.seed, step, 0xFA17]))
+    u_crash = rng.random(M)
+    u_rejoin = rng.random(M)
+
+    up = state.up.copy()
+    down = state.down_steps.copy()
+    weight = np.ones(M, np.float32)
+    events = []
+    for w in range(M):
+        if up[w]:
+            if w != 0 and u_crash[w] < faults.crash_prob:
+                up[w] = False
+                down[w] = 1
+                weight[w] = 0.0
+                events.append({"step": step, "worker": w,
+                               "event": "crash"})
+        else:
+            if u_rejoin[w] < faults.rejoin_prob:
+                k = int(down[w])
+                up[w] = True
+                down[w] = 0
+                weight[w] = np.float32(1.0 / (1.0 + k))
+                events.append({"step": step, "worker": w,
+                               "event": "rejoin", "staleness": k,
+                               "weight": float(weight[w])})
+            else:
+                down[w] += 1
+                weight[w] = 0.0
+    return ClusterState(up=up, down_steps=down), weight, events
 
 
 def step_time_ms(

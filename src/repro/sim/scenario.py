@@ -42,12 +42,19 @@ from repro.core.codec import (
 )
 from repro.core.schemes import QuantScheme, SchemeState
 from repro.core.stats import expected_variance
+from repro.dist.faults import FaultModel
 from repro.dist.sync import gather_stats
 from repro.models import Model
 from repro.train.data import DataConfig, Pipeline
 from repro.train.optim import OptimConfig, OptState, apply_updates, init_opt_state
 
-from .cluster import ClusterConfig, sample_step, step_time_ms
+from .cluster import (
+    ClusterConfig,
+    init_cluster_state,
+    sample_step,
+    step_faults,
+    step_time_ms,
+)
 from .topology import SIM_AXIS, TOPOLOGIES, run_compressed
 
 
@@ -90,6 +97,17 @@ class Scenario:
     # | 'topk[:k]'
     compress: tuple = ("plain",)
     cluster: ClusterConfig = ClusterConfig()
+    # opt-in wire integrity: every cell's codec lays per-bucket checksum
+    # words into the payload and sync excludes detected-corrupt buckets
+    # (core.codec ``integrity=``); requires a uniform/entropy codec
+    integrity: bool = False
+    # fault-model grid axis, crossed with schemes x topologies x
+    # compress: each entry is a ``dist.faults.FaultModel`` or ``None``
+    # (fault-free).  Wire faults (flips/drops/delays) hit the allreduce
+    # collective through a FaultyTransport; crash/rejoin steps the
+    # host-side Markov chain (``cluster.step_faults``) whose staleness
+    # weights feed the MaskedTransport renormalization.
+    fault_grid: tuple = (None,)
     seed: int = 0
 
     def make_scheme(self, spec: str) -> QuantScheme:
@@ -199,6 +217,27 @@ register(Scenario(
     steps=10,
 ))
 register(Scenario(
+    name="fault_tolerance",
+    description="The production allreduce under injected wire faults "
+                "with integrity words on: per-word bit flips (~5% of "
+                "buckets hit), whole-payload drops/delays, and a "
+                "crash/rejoin Markov chain whose rejoining workers "
+                "contribute staleness-weighted payloads.  Detected-"
+                "corrupt buckets are excluded and renormalized, so the "
+                "faulty cell's end-of-run loss stays within a few "
+                "percent of the fault-free cell (acceptance: <= 10%).",
+    schemes=("alq",),
+    topologies=("allreduce",),
+    integrity=True,
+    # per-WORD flip probability: a 512-coordinate 3-bit bucket spans 65
+    # wire words, so ~5% of buckets catch at least one flipped bit
+    fault_grid=(None,
+                FaultModel(flip_prob=0.0008, drop_prob=0.01,
+                           delay_prob=0.01, crash_prob=0.08,
+                           rejoin_prob=0.5, seed=13)),
+    steps=10,
+))
+register(Scenario(
     name="topk_sweep",
     description="Top-k sparsification at the equal-wire-budget default "
                 "k (index+value payloads cost what the dense symbols "
@@ -218,19 +257,23 @@ register(Scenario(
 
 def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
                      topo: str, mesh, use_pallas: bool,
-                     algo: CompressionAlgorithm):
+                     algo: CompressionAlgorithm,
+                     fault: FaultModel | None = None):
     """Jitted per-step function (runs inside shard_map on the 1x1 mesh so
     the model's internal psum('model') collectives resolve)."""
     M = scn.cluster.num_workers
     ocfg = OptimConfig(name=scn.optimizer, lr=scn.lr, weight_decay=0.0)
     pspecs = model.param_specs()
-    # no dropout -> active is statically all-ones; passing None keeps the
-    # topologies on the exact production reduction order (mean(0))
-    masked = scn.cluster.dropout_prob > 0
+    # no dropout and no crash/rejoin -> active is statically all-ones;
+    # passing None keeps the topologies on the exact production
+    # reduction order (mean(0)).  Crash/rejoin staleness weights are
+    # FRACTIONAL actives, so they also need the masked transport.
+    masked = (scn.cluster.dropout_prob > 0
+              or (fault is not None and fault.crash_prob > 0))
 
     def step(params, mu, nu, count, levels, multiplier, num_updates,
              ent_bits, resid, cstep, cum_err, ids, labels, key,
-             do_update, active):
+             do_update, active, fault_step):
         from repro.compress import CompressState
         scheme_state = SchemeState(levels, multiplier, num_updates,
                                    ent_bits)
@@ -251,7 +294,7 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
             topo, flats, scheme, scheme_state, algo, comp_state, key,
             active=active if masked else None,
             sync_mode=scn.sync_mode, server_bits=scn.server_bits,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, fault=fault, fault_step=fault_step)
 
         # end-to-end aggregate error vs the exact (masked) fp32 mean —
         # the metric where ring's per-hop compounding becomes visible
@@ -320,6 +363,10 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
             # payload family, the static plan otherwise
             "measured_bits_per_coord": jnp.asarray(
                 res.wire_bits_per_coord, jnp.float32)[0],
+            "corrupt_fraction": jnp.asarray(res.corrupt_fraction,
+                                            jnp.float32),
+            "excluded_workers": jnp.asarray(res.excluded_workers,
+                                            jnp.float32),
         }
         return (new_params, new_opt.mu, new_nu, new_opt.count,
                 scheme_state.levels, scheme_state.multiplier,
@@ -330,7 +377,7 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
     smapped = jax.shard_map(
         step, mesh=mesh,
         in_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(), P(),
-                  P(), P(), P(), P(), P(), P(), P(), P()),
+                  P(), P(), P(), P(), P(), P(), P(), P(), P()),
         out_specs=(pspecs, pspecs, pspecs, P(), P(), P(), P(), P(),
                    P(), P(), P(),
                    {k: P() for k in ("loss", "agg_err", "cum_agg_err",
@@ -340,7 +387,9 @@ def _build_cell_step(model: Model, scheme: QuantScheme, scn: Scenario,
                                      "server_bytes", "hops",
                                      "drift_mu", "drift_sigma", "psi",
                                      "levels", "entropy_bits_per_coord",
-                                     "measured_bits_per_coord")}),
+                                     "measured_bits_per_coord",
+                                     "corrupt_fraction",
+                                     "excluded_workers")}),
         check_vma=False)
     return jax.jit(smapped), ocfg
 
@@ -387,14 +436,27 @@ def _probe_entropy_codec(model: Model, scheme: QuantScheme, mesh,
 
 def _make_cell_codec(scn: Scenario, scheme: QuantScheme, model: Model,
                      mesh, params, batch) -> GradientCodec | None:
-    if scn.codec == "uniform" or not scheme.quantized:
+    if not scheme.quantized:
         return None
+    if scn.codec == "uniform":
+        if not scn.integrity:
+            return None          # default codec: exact production path
+        return dataclasses.replace(codec_for_scheme(scheme),
+                                   integrity=True)
     if scn.codec == "entropy":
-        return _probe_entropy_codec(model, scheme, mesh, params, batch,
-                                    scn.batch_per_worker,
-                                    scheme.init_levels())
+        codec = _probe_entropy_codec(model, scheme, mesh, params, batch,
+                                     scn.batch_per_worker,
+                                     scheme.init_levels())
+        if scn.integrity:
+            codec = dataclasses.replace(codec, integrity=True)
+        return codec
     if scn.codec != "mixed_width":
         raise ValueError(f"unknown scenario codec {scn.codec!r}")
+    if scn.integrity:
+        raise ValueError(
+            "integrity=True needs a per-bucket checksum slot; the "
+            "mixed-width payload family has none (use 'uniform' or "
+            "'entropy')")
     widths = scn.mixed_width_pattern or _probe_mixed_widths(
         model, scheme, mesh, params, batch, scn.batch_per_worker)
     return MixedWidthCodec(bucket_size=scheme.bucket_size,
@@ -440,7 +502,8 @@ def _fixed_bits_per_coord(scn: Scenario, scheme: QuantScheme, topo: str,
 
 
 def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
-              steps: int, use_pallas: bool) -> dict[str, Any]:
+              steps: int, use_pallas: bool,
+              fault: FaultModel | None = None) -> dict[str, Any]:
     scheme = scn.make_scheme(spec)
     cfg = configs.get_config(scn.arch)
     M = scn.cluster.num_workers
@@ -456,7 +519,7 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                              pipe.batch(0))
     algo = make_algorithm(comp_spec, scheme, codec=codec)
     step_fn, ocfg = _build_cell_step(model, scheme, scn, topo, mesh,
-                                     use_pallas, algo)
+                                     use_pallas, algo, fault=fault)
     opt = init_opt_state(ocfg, params)
     state = scheme.init_state()
 
@@ -486,10 +549,20 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
     traj = []
     sim_time = 0.0
     wire_total = 0.0
+    fault_events: list[dict[str, Any]] = []
+    cstate = (init_cluster_state(M)
+              if fault is not None and fault.crash_prob > 0 else None)
     with jax.set_mesh(mesh):
         for t in range(steps):
             batch = pipe.batch(t)
             compute_ms, active = sample_step(scn.cluster, t)
+            if cstate is not None:
+                # crash/rejoin Markov chain: crashed workers contribute
+                # weight 0, rejoining ones the staleness weight 1/(1+k)
+                # — fractional actives through the MaskedTransport
+                cstate, fweight, events = step_faults(fault, cstate, t)
+                active = active * fweight
+                fault_events.extend(events)
             key = jax.random.fold_in(jax.random.PRNGKey(scn.seed + 7), t)
             (params, mu, nu, count, levels, mult, n_upd, ent,
              resid, cstep, cum_err, m) = step_fn(
@@ -497,7 +570,7 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                 resid, cstep, cum_err,
                 batch["ids"], batch["labels"], key,
                 jnp.bool_(t in scn.update_milestones),
-                jnp.asarray(active))
+                jnp.asarray(active), jnp.int32(t))
             if reassign and t in scn.update_milestones:
                 new_widths = _probe_mixed_widths(
                     model, scheme, mesh, params, batch,
@@ -514,7 +587,8 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                         codec, widths=tuple(int(b) for b in new_widths))
                     algo = make_algorithm(comp_spec, scheme, codec=codec)
                     step_fn, _ = _build_cell_step(
-                        model, scheme, scn, topo, mesh, use_pallas, algo)
+                        model, scheme, scn, topo, mesh, use_pallas, algo,
+                        fault=fault)
             if refit_table and t in scn.update_milestones:
                 # the levels just adapted inside step_fn: re-fit the
                 # canonical-Huffman table to the NEW grid's occupancies
@@ -535,13 +609,20 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                     codec = new_codec
                     algo = make_algorithm(comp_spec, scheme, codec=codec)
                     step_fn, _ = _build_cell_step(
-                        model, scheme, scn, topo, mesh, use_pallas, algo)
+                        model, scheme, scn, topo, mesh, use_pallas, algo,
+                        fault=fault)
             sent = np.asarray(m["sent_bytes"], np.float64)
             recv = np.asarray(m["recv_bytes"], np.float64)
             server = float(m["server_bytes"])
             hops = int(m["hops"])
             dt = step_time_ms(scn.cluster, compute_ms, active, sent, recv,
                               server, hops)
+            if fault is not None and fault.delay_prob > 0:
+                # a delayed payload stalls the aggregation window: bill
+                # delay_ms once if any surviving worker's payload is late
+                delayed = np.asarray(fault.delayed_workers(t, M))
+                if bool(delayed[np.asarray(active) > 0].any()):
+                    dt += fault.delay_ms
             sim_time += dt
             # total bytes crossing worker NICs (uniform across topologies;
             # the server's own link shows up in recv, not double-counted)
@@ -572,6 +653,9 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                 "levels": np.asarray(m["levels"]).tolist(),
                 "compute_ms": np.asarray(compute_ms).tolist(),
                 "active": [bool(a > 0) for a in active],
+                "active_weight": [float(a) for a in np.asarray(active)],
+                "corrupt_fraction": float(m["corrupt_fraction"]),
+                "excluded_workers": float(m["excluded_workers"]),
             })
     return {
         "scheme": spec,
@@ -586,6 +670,9 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                        else float(scheme.bits)),
         "width_reassignments": width_reassignments,
         "table_refits": table_refits,
+        "integrity": bool(scn.integrity and scheme.quantized),
+        "fault": dataclasses.asdict(fault) if fault is not None else None,
+        "fault_events": fault_events,
         "fixed_bits_per_coord": _fixed_bits_per_coord(scn, scheme, topo,
                                                       d),
         "steps": traj,
@@ -597,6 +684,9 @@ def _run_cell(scn: Scenario, spec: str, topo: str, comp_spec: str,
                              if traj else None),
             "final_cum_agg_err": (traj[-1]["cum_agg_err"] if traj
                                   else None),
+            "mean_corrupt_fraction": (
+                float(np.mean([s["corrupt_fraction"] for s in traj]))
+                if traj else None),
         },
     }
 
@@ -615,8 +705,10 @@ def run_scenario(scn: Scenario, *, steps: int | None = None,
     for spec in scn.schemes:
         for topo in scn.topologies:
             for comp in scn.compress:
-                cells.append(_run_cell(scn, spec, topo, comp, n_steps,
-                                       use_pallas))
+                for fault in (scn.fault_grid or (None,)):
+                    cells.append(_run_cell(scn, spec, topo, comp,
+                                           n_steps, use_pallas,
+                                           fault=fault))
     out = {
         "scenario": scn.name,
         "description": scn.description,

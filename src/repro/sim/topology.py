@@ -50,7 +50,8 @@ from repro.core.codec import GradientCodec, codec_for_scheme, requant_codec
 from repro.core.levels import uniform_levels
 from repro.core.schemes import QuantScheme, SchemeState
 from repro.dist import sync
-from repro.dist.transport import MaskedTransport
+from repro.dist.faults import FaultModel, faulty
+from repro.dist.transport import MaskedTransport, make_transport
 
 # the vmap axis name the simulator runs its logical workers on
 SIM_AXIS = "sim_workers"
@@ -82,6 +83,12 @@ class TopologyResult(NamedTuple):
     #   variable-volume codecs (the entropy payload family), planned
     #   otherwise.  What the entropy_coded scenario charts against the
     #   metered entropy_bits_per_coord.
+    corrupt_fraction: jnp.ndarray = jnp.float32(0.0)  # () fraction of
+    #   (worker, bucket) wire slots that failed integrity checks this
+    #   round and were excluded (allreduce topology under a FaultModel
+    #   with integrity= plans; 0 everywhere else)
+    excluded_workers: jnp.ndarray = jnp.float32(0.0)  # () workers whose
+    #   whole payload failed integrity this round
 
 
 # ---------------------------------------------------------------------------
@@ -89,16 +96,26 @@ class TopologyResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
-                    use_pallas, want_own=False):
+                    use_pallas, want_own=False, fault=None,
+                    fault_step=0):
     """``active=None`` (statically homogeneous) uses the default
     ``MeshTransport`` — the production ``stacked.mean(0)`` reduction
     order, bit for bit; a mask switches to the renormalizing
-    ``MaskedTransport``."""
+    ``MaskedTransport``.  A ``FaultModel`` with wire faults wraps
+    whichever transport in a ``FaultyTransport`` keyed on
+    ``(fault.seed, fault_step)`` — the real ENCODE -> collective ->
+    DECODE path then runs under injected corruption."""
     M, d = grads.shape
+    inject = fault is not None and fault.any_wire_faults
 
     def worker(g):
         transport = (MaskedTransport((SIM_AXIS,), active)
                      if active is not None else None)
+        if inject:
+            transport = faulty(
+                transport if transport is not None
+                else make_transport((SIM_AXIS,)),
+                fault, fault_step)
         return sync.quantized_allreduce(
             g, scheme, state, key, axes=(SIM_AXIS,), mode=mode,
             use_pallas=use_pallas, transport=transport, codec=codec,
@@ -133,7 +150,11 @@ def _topo_allreduce(grads, scheme, state, key, active, *, mode, codec,
                           jnp.int32(hops), m.quant_error,
                           own if want_own else None,
                           jnp.asarray(m.comm_bits_per_coord,
-                                      jnp.float32))
+                                      jnp.float32),
+                          corrupt_fraction=jnp.asarray(
+                              m.corrupt_fraction, jnp.float32)[0],
+                          excluded_workers=jnp.asarray(
+                              m.excluded_workers, jnp.float32)[0])
 
 
 # ---------------------------------------------------------------------------
@@ -330,6 +351,8 @@ def run_topology(
     codec: GradientCodec | None = None,
     use_pallas: bool = False,
     want_own: bool = False,
+    fault: FaultModel | None = None,
+    fault_step=0,
 ) -> TopologyResult:
     """Synchronize (M, d) per-worker gradients over a named topology.
 
@@ -355,16 +378,29 @@ def run_topology(
         lossy round trip Q(input), the ``repro.compress`` feedback
         signal (free for allreduce/param_server; the ring pays an extra
         local requantize pass).
+      fault / fault_step: wire-fault injection (``dist.faults
+        .FaultModel``) for the allreduce topology — the production
+        collective path runs under a ``FaultyTransport`` keyed on
+        ``(fault.seed, fault_step)``.  Only the allreduce topology
+        exercises the real ``dist.sync`` wire; requesting wire faults
+        on param_server/ring raises rather than silently simulating
+        nothing.
     """
     grads = jnp.asarray(grads)
     if active is not None:
         active = jnp.asarray(active, jnp.float32)
     if codec is None:
         codec = codec_for_scheme(scheme)
+    if (fault is not None and fault.any_wire_faults
+            and name != "allreduce"):
+        raise ValueError(
+            f"wire-fault injection targets the real dist.sync collective "
+            f"(topology 'allreduce'); topology {name!r} does not run it")
     if name == "allreduce":
         return _topo_allreduce(grads, scheme, state, key, active,
                                mode=sync_mode, codec=codec,
-                               use_pallas=use_pallas, want_own=want_own)
+                               use_pallas=use_pallas, want_own=want_own,
+                               fault=fault, fault_step=fault_step)
     if name == "param_server":
         if not scheme.quantized:
             return _topo_allreduce(grads, scheme, state, key, active,
@@ -394,6 +430,8 @@ def run_compressed(
     sync_mode: str = "all_gather",
     server_bits: int | None = sync.TWO_PHASE_BITS,
     use_pallas: bool = False,
+    fault: FaultModel | None = None,
+    fault_step=0,
 ):
     """``run_topology`` under a ``repro.compress`` algorithm.
 
@@ -413,7 +451,8 @@ def run_compressed(
     res = run_topology(name, prep, scheme, state, key, active=active,
                        sync_mode=sync_mode, server_bits=server_bits,
                        codec=codec, use_pallas=use_pallas,
-                       want_own=algorithm.stateful)
+                       want_own=algorithm.stateful,
+                       fault=fault, fault_step=fault_step)
     own = res.own if algorithm.stateful else prep
     new_comp = jax.vmap(algorithm.feedback)(comp_state, prep, own)
     return res, new_comp

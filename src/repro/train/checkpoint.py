@@ -1,10 +1,23 @@
-"""Minimal pytree checkpointing (npz-backed; no orbax in this image)."""
+"""Minimal pytree checkpointing (npz-backed; no orbax in this image).
+
+Crash-safe by construction: ``save`` writes to a sibling tmp file,
+fsyncs it, then ``os.replace``s into place — a reader never observes a
+torn checkpoint, and a crash mid-save leaves the previous checkpoint
+intact.  ``save_step`` / ``latest_checkpoint`` / ``restore_latest``
+layer a step-numbered directory convention on top, which is what the
+launcher's periodic-save + auto-resume loop (``repro.launch.train``)
+uses to survive worker crashes.
+"""
 from __future__ import annotations
 
 import os
+import re
+import time
 
 import jax
 import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)\.npz$")
 
 
 def _keystr(path) -> str:
@@ -22,13 +35,44 @@ def save(path: str, tree) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
         np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())  # durable before the rename commits it
     os.replace(tmp, path)
 
 
+def save_with_retry(path: str, tree, *, attempts: int = 3,
+                    backoff_s: float = 0.1) -> None:
+    """``save`` with bounded retry/backoff on OSError (full disk, NFS
+    hiccup, ...).  Re-raises the last error after ``attempts`` tries."""
+    for i in range(attempts):
+        try:
+            save(path, tree)
+            return
+        except OSError:
+            if i == attempts - 1:
+                raise
+            time.sleep(backoff_s * (2 ** i))
+
+
 def restore(path: str, like):
-    """Restore into the structure of `like` (shapes must match)."""
+    """Restore into the structure of `like` (shapes must match).
+
+    Raises ValueError naming the exact missing/extra pytree keys on a
+    structure mismatch, and the offending key on a shape mismatch —
+    enough to diagnose a wrong --arch or optimizer without a debugger.
+    """
     with np.load(path) as data:
         leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+        want = {_keystr(kp) for kp, _ in leaves_with_path}
+        have = set(data.files)
+        if want != have:
+            missing = sorted(want - have)
+            extra = sorted(have - want)
+            raise ValueError(
+                f"checkpoint {path!r} does not match the expected "
+                f"structure: missing keys {missing or 'none'}, "
+                f"extra keys {extra or 'none'} (saved with a different "
+                "model/optimizer config?)")
         new_leaves = []
         for kp, leaf in leaves_with_path:
             arr = data[_keystr(kp)]
@@ -38,3 +82,56 @@ def restore(path: str, like):
                     f"{arr.shape} vs {tuple(leaf.shape)}")
             new_leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+# ---------------------------------------------------------------------------
+# step-numbered checkpoint directories (periodic save + auto-resume)
+# ---------------------------------------------------------------------------
+
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+
+
+def save_step(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    """Save ``tree`` as ``ckpt_dir/step_NNNNNNNN.npz`` (with retry),
+    pruning all but the newest ``keep`` checkpoints.  Returns the path."""
+    path = step_path(ckpt_dir, step)
+    save_with_retry(path, tree)
+    steps = sorted(list_checkpoints(ckpt_dir))
+    for old in steps[:-keep] if keep > 0 else []:
+        try:
+            os.remove(step_path(ckpt_dir, old))
+        except OSError:
+            pass  # pruning is best-effort; never fail the save
+    return path
+
+
+def list_checkpoints(ckpt_dir: str) -> list[int]:
+    """Step numbers of the checkpoints present in ``ckpt_dir``."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_checkpoint(ckpt_dir: str) -> tuple[int, str] | None:
+    """(step, path) of the newest checkpoint, or None if there is none."""
+    steps = list_checkpoints(ckpt_dir)
+    if not steps:
+        return None
+    return steps[-1], step_path(ckpt_dir, steps[-1])
+
+
+def restore_latest(ckpt_dir: str, like) -> tuple[int, object] | None:
+    """Restore the newest checkpoint in ``ckpt_dir`` into the structure
+    of ``like``; returns (step, tree) or None when the directory holds
+    no checkpoint (fresh start)."""
+    found = latest_checkpoint(ckpt_dir)
+    if found is None:
+        return None
+    step, path = found
+    return step, restore(path, like)

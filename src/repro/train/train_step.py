@@ -43,6 +43,11 @@ class SyncMetricsLite(NamedTuple):
     entropy_bits_per_coord: jnp.ndarray
     residual_norm: jnp.ndarray = jnp.float32(0.0)
     kept_fraction: jnp.ndarray = jnp.float32(1.0)
+    # wire-integrity accounting (dist.sync with ``integrity=`` plans):
+    # fraction of (worker, bucket) payload slots excluded as corrupt,
+    # and workers whose whole payload was excluded
+    corrupt_fraction: jnp.ndarray = jnp.float32(0.0)
+    excluded_workers: jnp.ndarray = jnp.float32(0.0)
 
 
 class TrainState(NamedTuple):
@@ -80,6 +85,7 @@ TRAIN_METRIC_KEYS = (
     "loss", "grad_norm", "comm_bits_per_coord", "quant_error",
     "reduce_bits_per_coord", "broadcast_bits_per_coord",
     "entropy_bits_per_coord", "residual_norm", "kept_fraction",
+    "corrupt_fraction", "excluded_workers",
 )
 
 
@@ -114,17 +120,23 @@ class TrainConfig:
     # allreduce path; for FSDP backward error feedback see
     # ``dist.fsdp.make_gather(algorithm=...)``.
     compress: str = "plain"
+    # opt-in wire integrity: per-bucket checksum words in the payload;
+    # dist.sync excludes detected-corrupt buckets from the aggregate
+    # and reports corrupt_fraction / excluded_workers in the metrics
+    integrity: bool = False
 
 
 def _make_algo(tcfg: TrainConfig):
     if not tcfg.scheme.quantized:
         return None
-    # None = the scheme's uniform codec; only a non-default codec is
-    # passed explicitly (make_algorithm rejects codec overrides for
-    # 'topk', which owns its SparseCodec)
-    codec = (make_codec(tcfg.scheme, tcfg.codec,
-                        tcfg.mixed_width_pattern)
-             if tcfg.codec != "uniform" else None)
+    # None = the scheme's uniform codec; only a non-default codec (or
+    # an integrity-on plan) is passed explicitly (make_algorithm rejects
+    # codec overrides for 'topk', which owns its SparseCodec)
+    codec = None
+    if tcfg.codec != "uniform" or tcfg.integrity:
+        codec = make_codec(tcfg.scheme, tcfg.codec,
+                           tcfg.mixed_width_pattern,
+                           integrity=tcfg.integrity)
     return make_algorithm(tcfg.compress, tcfg.scheme, codec=codec)
 
 
@@ -301,6 +313,10 @@ def make_train_step(model: Model, tcfg: TrainConfig, *, data_axes=("data",)):
                                          jnp.float32),
             "kept_fraction": jnp.asarray(metrics.kept_fraction,
                                          jnp.float32),
+            "corrupt_fraction": jnp.asarray(metrics.corrupt_fraction,
+                                            jnp.float32),
+            "excluded_workers": jnp.asarray(metrics.excluded_workers,
+                                            jnp.float32),
         }
         return new_state, out_metrics
 

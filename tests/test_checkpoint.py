@@ -1,0 +1,80 @@
+"""train.checkpoint: atomic saves, actionable restore errors, and the
+step-numbered save/auto-resume convention the launcher's crash-recovery
+loop is built on."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint
+
+
+def _tree():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.zeros((3,), jnp.float32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    tree = _tree()
+    checkpoint.save(path, tree)
+    assert not os.path.exists(path + ".tmp")  # tmp committed atomically
+    back = checkpoint.restore(path, tree)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_restore_names_missing_and_extra_keys(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, {"w": jnp.zeros((2,)), "old": jnp.zeros((2,))})
+    with pytest.raises(ValueError) as e:
+        checkpoint.restore(path, {"w": jnp.zeros((2,)),
+                                  "new": jnp.zeros((2,))})
+    msg = str(e.value)
+    assert "'new'" in msg and "'old'" in msg
+    assert "missing" in msg and "extra" in msg
+
+
+def test_restore_names_shape_mismatch_key(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, {"w": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match=r"\['w'\]"):
+        checkpoint.restore(path, {"w": jnp.zeros((3, 2))})
+
+
+def test_save_step_resume_and_pruning(tmp_path):
+    ckdir = str(tmp_path / "run")
+    assert checkpoint.restore_latest(ckdir, _tree()) is None  # fresh
+    for step in (1, 3, 5, 7):
+        checkpoint.save_step(ckdir, step, {"s": jnp.float32(step)},
+                             keep=2)
+    assert checkpoint.list_checkpoints(ckdir) == [5, 7]  # pruned
+    step, tree = checkpoint.restore_latest(ckdir, {"s": jnp.float32(0)})
+    assert step == 7
+    assert float(tree["s"]) == 7.0
+
+
+def test_save_with_retry_survives_transient_failure(tmp_path, monkeypatch):
+    path = str(tmp_path / "ck.npz")
+    real_replace = os.replace
+    fails = {"n": 2}
+
+    def flaky(src, dst):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", flaky)
+    checkpoint.save_with_retry(path, _tree(), attempts=3,
+                               backoff_s=0.0)
+    assert os.path.exists(path)
+
+
+def test_save_with_retry_reraises_after_attempts(tmp_path, monkeypatch):
+    monkeypatch.setattr(os, "replace",
+                        lambda s, d: (_ for _ in ()).throw(OSError("dead")))
+    with pytest.raises(OSError):
+        checkpoint.save_with_retry(str(tmp_path / "ck.npz"), _tree(),
+                                   attempts=2, backoff_s=0.0)

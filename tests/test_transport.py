@@ -1,0 +1,102 @@
+"""dist.transport: the aggregation-rule contracts the simulator and the
+fault-tolerant sync path both lean on.
+
+* ``MaskedTransport`` with every worker active reproduces the plain
+  ``MeshTransport`` mean: exactly uniform weights, values equal to the
+  last ulp (tensordot-of-weights may reassociate the reduction, which
+  is why fault-free paths pass ``active=None`` and keep ``mean(0)``);
+* transport weights are convex (sum to 1) under any active pattern;
+* a single-survivor mask degrades the aggregate to exactly that
+  worker's payload;
+* ``mean_workers_bucketed`` with an all-valid mask reproduces the
+  masked mean, and with a constant-per-worker mask reproduces masking
+  that worker out — the bit-exactness seam ``dist.sync`` uses to
+  exclude detected-corrupt payloads.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.transport import (
+    MaskedTransport,
+    MeshTransport,
+    Transport,
+    make_transport,
+)
+
+M, D = 4, 1024
+BUCKET = 128
+STACKED = jax.random.normal(jax.random.PRNGKey(0), (M, D)) * 0.3
+
+
+def test_all_active_masked_matches_mesh():
+    mesh = Transport(())
+    masked = MaskedTransport((), jnp.ones((M,)))
+    # exactly uniform weights ...
+    np.testing.assert_array_equal(np.asarray(masked.weights()),
+                                  np.full(M, 1.0 / M, np.float32))
+    # ... and the same mean up to the reduction's last ulp
+    ref = np.asarray(mesh.mean_workers(STACKED))
+    got = np.asarray(masked.mean_workers(STACKED))
+    np.testing.assert_allclose(got, ref, rtol=0,
+                               atol=np.spacing(np.abs(ref).max()))
+
+
+def test_weights_sum_to_one():
+    for active in ([1, 1, 1, 1], [1, 0, 1, 0], [1, 0, 0, 0],
+                   [1.0, 0.5, 0.0, 0.25]):
+        t = MaskedTransport((), jnp.asarray(active, jnp.float32))
+        np.testing.assert_allclose(float(jnp.sum(t.weights())), 1.0,
+                                   rtol=1e-6)
+
+
+def test_single_survivor_degrades_to_its_payload():
+    t = MaskedTransport((), jnp.asarray([0.0, 0.0, 1.0, 0.0]))
+    np.testing.assert_array_equal(np.asarray(t.mean_workers(STACKED)),
+                                  np.asarray(STACKED[2]))
+
+
+def test_bucketed_all_valid_matches_mean_workers():
+    t = MaskedTransport((), jnp.asarray([1.0, 1.0, 0.0, 1.0]))
+    valid = jnp.ones((M, D // BUCKET), bool)
+    np.testing.assert_array_equal(
+        np.asarray(t.mean_workers_bucketed(STACKED, valid, BUCKET)),
+        np.asarray(t.mean_workers(STACKED)))
+
+
+def test_bucketed_constant_row_mask_equals_transport_mask():
+    # invalidating every bucket of worker 1 must aggregate bit-exactly
+    # like masking worker 1 out at the transport (the acceptance seam
+    # for integrity-based exclusion in dist.sync)
+    valid = jnp.ones((M, D // BUCKET), bool).at[1].set(False)
+    got = MeshTransport(()).mean_workers_bucketed(STACKED, valid, BUCKET)
+    ref = MaskedTransport(
+        (), jnp.asarray([1.0, 0.0, 1.0, 1.0])).mean_workers(STACKED)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_bucketed_all_invalid_bucket_is_zero():
+    valid = jnp.ones((M, D // BUCKET), bool).at[:, 3].set(False)
+    t = MeshTransport(())
+    out = np.asarray(t.mean_workers_bucketed(STACKED, valid, BUCKET))
+    np.testing.assert_array_equal(
+        out[3 * BUCKET:4 * BUCKET], np.zeros(BUCKET, np.float32))
+    # buckets are independent: the others are bit-identical with the
+    # all-valid aggregation
+    ref = np.asarray(t.mean_workers_bucketed(
+        STACKED, jnp.ones((M, D // BUCKET), bool), BUCKET))
+    np.testing.assert_array_equal(out[:3 * BUCKET], ref[:3 * BUCKET])
+
+
+def test_bucketed_nan_in_invalid_bucket_does_not_leak():
+    poisoned = STACKED.at[2, 5 * BUCKET].set(jnp.nan)
+    valid = jnp.ones((M, D // BUCKET), bool).at[2, 5].set(False)
+    out = np.asarray(
+        MeshTransport(()).mean_workers_bucketed(poisoned, valid, BUCKET))
+    assert np.isfinite(out).all()
+
+
+def test_make_transport_factory():
+    assert isinstance(make_transport(()), MeshTransport)
+    t = make_transport((), active=jnp.ones((M,)))
+    assert isinstance(t, MaskedTransport)
